@@ -1,0 +1,57 @@
+"""Model-side micro-benchmarks: reduced-config train-step and decode-step
+wall-clock per architecture (CPU host numbers — the TPU projection lives in
+the roofline table)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def train_and_decode_steps():
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models.model import build_model
+    from repro.train import optimizer as opt_mod
+    from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+    rng = np.random.default_rng(0)
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        ocfg = opt_mod.OptimizerConfig()
+        opt = opt_mod.make_optimizer(ocfg)
+        state = init_train_state(model, jax.random.PRNGKey(0), opt)
+        b, s = 2, 32
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        }
+        if cfg.n_patches:
+            batch["patches"] = jnp.zeros((b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros((b, cfg.enc_frames, cfg.d_model), jnp.float32)
+        step = jax.jit(make_train_step(model, opt, TrainConfig(optimizer=ocfg)))
+
+        def run_train(st, bt):
+            _, metrics = step(st, bt)
+            return metrics["loss"]
+
+        dt, _ = time_fn(run_train, state, batch, warmup=1, iters=3)
+        emit(f"model/{arch}/train_step_reduced", dt * 1e6, f"b{b}s{s}")
+
+        dstate = model.init_decode_state(b, max_seq=64)
+        dstep = jax.jit(model.decode_step)
+        tok = jnp.zeros((b,), jnp.int32)
+
+        def run_decode(t, st):
+            logits, _ = dstep(state.params, t, st)
+            return logits
+
+        dt, _ = time_fn(run_decode, tok, dstate, warmup=1, iters=3)
+        emit(f"model/{arch}/decode_step_reduced", dt * 1e6, f"b{b}")
+
+
+def run():
+    train_and_decode_steps()

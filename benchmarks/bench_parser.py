@@ -1,0 +1,155 @@
+"""Parser benchmarks mirroring the paper's evaluation figures.
+
+  * fig9  — chunk-size sweep (time per parse vs chunk bytes)
+  * fig10 — parsing rate vs input size
+  * fig11 — tagging modes (tagged / inline / vector) + skewed input
+  * fig12 — streaming partition-size sweep
+  * fig13 — end-to-end vs baselines (python csv, numpy split, chunked-
+            at-newline "Inst.Loading-style" constrained parser)
+
+All wall-clock on the CPU backend (this container's "device"); the TPU-
+projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
+"""
+from __future__ import annotations
+
+import csv as pycsv
+import io
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, emit, gbps, taxi_parser, time_fn, yelp_parser
+from repro.core.streaming import StreamingParser
+
+N_YELP = 2000    # ~1.3 MB
+N_TAXI = 8000    # ~0.7 MB
+
+
+def fig9_chunk_size():
+    data = dataset("yelp", N_YELP)
+    for chunk in (16, 31, 32, 64, 128, 256):
+        p = yelp_parser(chunk_size=chunk)
+        chunks = p.prepare(data)
+        dt, _ = time_fn(p.parse_chunks, jnp.asarray(chunks))
+        emit(f"fig9/yelp/chunk{chunk}", dt * 1e6, f"{gbps(len(data), dt):.3f}GB/s")
+
+
+def fig10_input_size():
+    for kind, base in (("yelp", 250), ("taxi", 1000)):
+        for mult in (1, 4, 16):
+            data = dataset(kind, base * mult)
+            p = yelp_parser() if kind == "yelp" else taxi_parser()
+            chunks = p.prepare(data)
+            dt, _ = time_fn(p.parse_chunks, jnp.asarray(chunks))
+            emit(f"fig10/{kind}/{len(data)//1024}KiB", dt * 1e6,
+                 f"{gbps(len(data), dt):.3f}GB/s")
+
+
+def fig11_tagging_modes():
+    data = dataset("yelp", N_YELP)
+    for mode in ("tagged", "inline", "vector"):
+        p = yelp_parser(tagging=mode)
+        chunks = p.prepare(data)
+        dt, _ = time_fn(p.parse_chunks, jnp.asarray(chunks))
+        emit(f"fig11/yelp/{mode}", dt * 1e6, f"{gbps(len(data), dt):.3f}GB/s")
+    skew = dataset("skewed", 400)
+    p = yelp_parser(max_records=1 << 12)
+    chunks = p.prepare(skew)
+    dt, _ = time_fn(p.parse_chunks, jnp.asarray(chunks))
+    emit("fig11/skewed/tagged", dt * 1e6, f"{gbps(len(skew), dt):.3f}GB/s")
+
+
+def fig12_partition_size():
+    data = dataset("yelp", N_YELP * 2)
+    for part_kib in (64, 256, 1024):
+        p = yelp_parser(max_records=1 << 13)
+        sp = StreamingParser(p, part_kib * 1024, max_carry_bytes=1 << 16)
+        for _ in sp.parse_stream([data]):  # warm-up: compile the partition shape
+            pass
+        t0 = time.perf_counter()
+        n = 0
+        for _, nrec in sp.parse_stream([data]):
+            n += nrec
+        dt = time.perf_counter() - t0
+        emit(f"fig12/yelp/part{part_kib}KiB", dt * 1e6,
+             f"{gbps(len(data), dt):.3f}GB/s;records={n}")
+
+
+def _baseline_python_csv(data: bytes, kind: str):
+    rows = list(pycsv.reader(io.StringIO(data.decode())))
+    # include type conversion like ParPaRaw does
+    if kind == "yelp":
+        for r in rows:
+            int(r[0]); int(r[1]); int(r[2]); r[3]; r[4]
+    else:  # taxi: ints/floats/dates per TAXI_SCHEMA
+        for r in rows:
+            int(r[0]); r[1]; r[2]; int(r[3]); float(r[4])
+            int(r[5]); int(r[6]); int(r[7])
+            for x in r[8:15]:
+                float(x)
+            int(r[15]); float(r[16])
+    return len(rows)
+
+
+def _baseline_numpy_split(data: bytes):
+    """Constrained splitter (no quote support — the format-specific trick the
+    paper's §2 baselines use; WRONG on quoted yelp data, shown for rate only)."""
+    arr = np.frombuffer(data, np.uint8)
+    newlines = np.flatnonzero(arr == ord("\n"))
+    commas = np.flatnonzero(arr == ord(","))
+    return len(newlines) + 0 * len(commas)
+
+
+def _baseline_chunked_newline(data: bytes, n_threads=8):
+    """Mühlbauer-style chunking: split at newlines after chunk boundaries,
+    then sequential-parse each chunk (here: single-core loop standing in for
+    the thread pool; counts records only)."""
+    n = len(data)
+    bounds = [0]
+    for i in range(1, n_threads):
+        pos = data.find(b"\n", i * n // n_threads)
+        bounds.append(pos + 1 if pos >= 0 else n)
+    bounds.append(n)
+    total = 0
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        total += data.count(b"\n", lo, hi)
+    return total
+
+
+def fig13_end_to_end():
+    for kind in ("yelp", "taxi"):
+        data = dataset(kind, N_YELP if kind == "yelp" else N_TAXI)
+        p = yelp_parser() if kind == "yelp" else taxi_parser(max_records=1 << 13)
+        sp = StreamingParser(p, 1 << 18, max_carry_bytes=1 << 16)
+        sp.parse_all([data])  # warm-up: compile the partition shape
+        t0 = time.perf_counter()
+        out = sp.parse_all([data])
+        dt_par = time.perf_counter() - t0
+        emit(f"fig13/{kind}/parparaw", dt_par * 1e6, f"{gbps(len(data), dt_par):.3f}GB/s")
+
+        t0 = time.perf_counter()
+        _baseline_python_csv(data, kind)
+        dt = time.perf_counter() - t0
+        emit(f"fig13/{kind}/python_csv", dt * 1e6,
+             f"{gbps(len(data), dt):.3f}GB/s;speedup={dt/dt_par:.2f}x")
+
+        t0 = time.perf_counter()
+        _baseline_numpy_split(data)
+        dt = time.perf_counter() - t0
+        emit(f"fig13/{kind}/numpy_split_constrained", dt * 1e6,
+             f"{gbps(len(data), dt):.3f}GB/s")
+
+        t0 = time.perf_counter()
+        _baseline_chunked_newline(data)
+        dt = time.perf_counter() - t0
+        emit(f"fig13/{kind}/chunked_newline_constrained", dt * 1e6,
+             f"{gbps(len(data), dt):.3f}GB/s")
+
+
+def run():
+    fig9_chunk_size()
+    fig10_input_size()
+    fig11_tagging_modes()
+    fig12_partition_size()
+    fig13_end_to_end()

@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, CSV-line output protocol."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.data import synth
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, warmup=2, iters=5, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def yelp_parser(chunk_size=64, max_records=1 << 15, **kw) -> Parser:
+    return Parser(ParserConfig(
+        dfa=make_csv_dfa(), schema=Schema.of(*synth.YELP_SCHEMA),
+        max_records=max_records, chunk_size=chunk_size, **kw,
+    ))
+
+
+def taxi_parser(chunk_size=64, max_records=1 << 14, **kw) -> Parser:
+    return Parser(ParserConfig(
+        dfa=make_csv_dfa(), schema=Schema.of(*synth.TAXI_SCHEMA),
+        max_records=max_records, chunk_size=chunk_size, **kw,
+    ))
+
+
+def dataset(kind: str, n_records: int, seed=0) -> bytes:
+    rng = np.random.default_rng(seed)
+    if kind == "yelp":
+        return synth.yelp_like(rng, n_records)
+    if kind == "taxi":
+        return synth.taxi_like(rng, n_records)
+    if kind == "skewed":
+        return synth.skewed(rng, n_records)
+    raise ValueError(kind)
+
+
+def gbps(nbytes: int, seconds: float) -> float:
+    return nbytes / seconds / 1e9

@@ -1,0 +1,32 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One suite per paper table/figure (bench_parser: Figs. 9–13), plus the
+algorithm-variant micro-benches (bench_scan — §Perf hypothesis inputs) and
+the model-zoo step timings (bench_models).  Output protocol: CSV lines
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "parser", "scan", "models"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.suite in ("all", "parser"):
+        from benchmarks import bench_parser
+        bench_parser.run()
+    if args.suite in ("all", "scan"):
+        from benchmarks import bench_scan
+        bench_scan.run()
+    if args.suite in ("all", "models"):
+        from benchmarks import bench_models
+        bench_models.run()
+
+
+if __name__ == "__main__":
+    main()

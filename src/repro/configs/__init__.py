@@ -1,0 +1,5 @@
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "shape_applicable",
+           "ARCH_IDS", "get_config"]

@@ -1,0 +1,165 @@
+"""Model/shape/run configuration dataclasses shared by the whole framework."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    head_dim: int = 0            # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0  # 0 disables RoPE
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    mlp_variant: str = "swiglu"   # swiglu | gelu (starcoder2)
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0            # per-expert FFN width
+    n_shared_experts: int = 0
+    first_k_dense: int = 0       # leading dense layers (kimi-k2)
+    moe_impl: str = "dense"      # dense | a2a
+    moe_fsdp: bool = False       # ZeRO-3 expert weights over the data axis
+    moe_fsdp_int8: bool = False  # int8-compressed FSDP weight gathers
+    capacity_factor: float = 1.25
+    moe_renormalize: bool = True
+    moe_aux_weight: float = 0.01
+
+    # --- SSM (Mamba-2 / SSD) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (Hymba) ------------------------------------------------------
+    attn_window: Optional[int] = None   # sliding window (non-global layers)
+    global_layer_every: int = 0         # 0 = all layers global
+
+    # --- encoder-decoder (Whisper) --------------------------------------------
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_frames: int = 1500              # stub frontend sequence length
+
+    # --- VLM (InternVL) --------------------------------------------------------
+    n_patches: int = 0                  # stub patch embeddings prepended
+
+    # --- numerics / perf knobs ---------------------------------------------
+    param_dtype: jnp.dtype = jnp.bfloat16
+    remat: bool = True
+    scan_layers: bool = True
+    attn_chunk_threshold: int = 8192    # seq len above which chunked attn kicks in
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 1024
+    logit_chunk: int = 0                # 0 = unchunked loss
+
+    #: embedding/LM-head tables are padded to this multiple so the vocab dim
+    #: always divides the 16-way TP axis (standard practice; pad logits are
+    #: masked to −inf in the loss and decode paths)
+    vocab_pad_multiple: int = 256
+
+    def __post_init__(self):
+        if self.n_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode memory is bounded (SSM state / sliding window)."""
+        return self.family == "ssm" or (
+            self.family == "hybrid" and self.attn_window is not None
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab
+        total = v * d * (1 if self.tie_embeddings else 2)
+        hd = self.head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        ffn_mats = 3 if self.mlp_variant == "swiglu" else 2
+        dense_ffn = ffn_mats * d * self.d_ff
+        moe_ffn = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts \
+            + self.n_shared_experts * 3 * d * self.moe_d_ff
+        if self.family == "ssm":
+            d_inner = self.ssm_expand * d
+            h = d_inner // self.ssm_headdim
+            gn = self.ssm_ngroups * self.ssm_state
+            per = d * (2 * d_inner + 2 * gn + h) + d_inner * d
+            total += self.n_layers * per
+        elif self.family == "moe":
+            n_moe = self.n_layers - self.first_k_dense
+            total += self.first_k_dense * (attn + dense_ffn) + n_moe * (attn + moe_ffn)
+        elif self.family == "hybrid":
+            d_inner = self.ssm_expand * d
+            h = d_inner // self.ssm_headdim
+            gn = self.ssm_ngroups * self.ssm_state
+            ssm = d * (2 * d_inner + 2 * gn + h) + d_inner * d
+            total += self.n_layers * (attn + ssm + dense_ffn)
+        else:
+            n_dec = self.n_layers
+            total += n_dec * (attn + dense_ffn)
+            if self.is_encoder_decoder:
+                total += self.n_enc_layers * (attn + dense_ffn) + n_dec * attn  # cross
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        hd = self.head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        act_ffn = (self.top_k + self.n_shared_experts) * 3 * d * self.moe_d_ff + d * self.n_experts
+        n_moe = self.n_layers - self.first_k_dense
+        total = self.vocab * d * 2
+        total += self.first_k_dense * (attn + 3 * d * self.d_ff) + n_moe * (attn + act_ffn)
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+
+    name: str        # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "pure full-attention arch: 524k-token decode requires sub-quadratic "
+            "attention / bounded cache (see DESIGN.md §5)"
+        )
+    return True, ""

@@ -1,0 +1,17 @@
+"""deepseek-7b [dense] — llama-arch, MHA (kv == heads) (arXiv:2401.02954).
+
+30L d_model=4096 32H (kv=32) d_ff=11008 vocab=102400.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab=102400,
+)
+
+REDUCED = ModelConfig(
+    name="deepseek-7b-reduced", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512, remat=False,
+)

@@ -1,0 +1,26 @@
+"""hymba-1.5b [hybrid] — parallel attention + Mamba heads (arXiv:2411.13676).
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Sliding-window attention except every 8th layer (global), which bounds the
+KV cache — this arch runs the 500k long-context decode shape.  Hymba's
+learned meta tokens are omitted (backbone-only scope, DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab=32001, head_dim=64,
+    # d_inner=3200 → 64 SSD heads of width 50; 4 B/C groups (16 heads per
+    # group) so head counts divide both the group count and the 16-way TP axis
+    ssm_state=16, ssm_expand=2, ssm_headdim=50, ssm_ngroups=4,
+    attn_window=1024, global_layer_every=8,
+)
+
+REDUCED = ModelConfig(
+    name="hymba-1.5b-reduced", family="hybrid",
+    n_layers=2, d_model=80, n_heads=5, n_kv_heads=1, head_dim=16,
+    d_ff=160, vocab=512,
+    ssm_state=8, ssm_expand=2, ssm_headdim=20, ssm_ngroups=1,
+    attn_window=32, global_layer_every=2, remat=False, ssm_chunk=16,
+)

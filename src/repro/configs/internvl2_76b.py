@@ -1,0 +1,20 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 backbone (arXiv:2404.16821).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.  The vision
+frontend is a STUB per the assignment: ``input_specs`` supplies precomputed
+patch embeddings; the LM backbone is fully implemented.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab=128256, rope_theta=1e6,
+    n_patches=256,
+)
+
+REDUCED = ModelConfig(
+    name="internvl2-76b-reduced", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512, n_patches=8, remat=False,
+)

@@ -1,0 +1,25 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8
+(paper-table config; arXiv:2501.kimi2).
+
+61L d_model=7168 64H (GQA kv=8) d_ff(per-expert)=2048 vocab=163840,
+1 leading dense layer + 1 shared expert (DeepSeek-V3-style layout).
+Expert parallelism via all_to_all + ragged_dot; expert weights FSDP-sharded
+over the data axis (ZeRO-3) — see DESIGN.md §5 for the memory analysis.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=18432, vocab=163840, head_dim=112,
+    n_experts=384, top_k=8, moe_d_ff=2048, n_shared_experts=1,
+    first_k_dense=1, moe_impl="a2a", moe_fsdp=True,
+)
+
+REDUCED = ModelConfig(
+    name="kimi-k2-reduced", family="moe",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512, head_dim=16,
+    n_experts=8, top_k=2, moe_d_ff=32, n_shared_experts=1,
+    first_k_dense=1, moe_impl="dense", remat=False,
+)

@@ -1,0 +1,17 @@
+"""llama3.2-3b [dense] — small llama3 (hf:meta-llama/Llama-3.2 family).
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="dense",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=8192, vocab=128256, rope_theta=5e5, tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="llama3.2-3b-reduced", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512, tie_embeddings=True, remat=False,
+)

@@ -1,0 +1,20 @@
+"""mamba2-370m [ssm] — SSD / state-space duality (arXiv:2405.21060).
+
+48L d_model=1024, attention-free, vocab=50280, ssm_state=128.
+O(1)-state decode → runs the 500k long-context shape.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, vocab=50280,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_ngroups=1,
+    rope_theta=0.0,
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-370m-reduced", family="ssm",
+    n_layers=2, d_model=64, vocab=512,
+    ssm_state=16, ssm_expand=2, ssm_headdim=16, ssm_ngroups=1,
+    rope_theta=0.0, remat=False, ssm_chunk=16,
+)

@@ -1,0 +1,17 @@
+"""qwen2-1.5b [dense] — GQA kv=2 with QKV bias (arXiv:2407.10671).
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b", family="dense",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+    d_ff=8960, vocab=151936, qkv_bias=True, tie_embeddings=True,
+)
+
+REDUCED = ModelConfig(
+    name="qwen2-1.5b-reduced", family="dense",
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab=512, qkv_bias=True, tie_embeddings=True, remat=False,
+)

@@ -1,0 +1,26 @@
+"""Architecture registry: --arch <id> → ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "llama3.2-3b": "repro.configs.llama32_3b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "whisper-base": "repro.configs.whisper_base",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.REDUCED if reduced else mod.CONFIG

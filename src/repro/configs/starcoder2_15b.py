@@ -1,0 +1,17 @@
+"""starcoder2-15b [dense] — GQA kv=4, RoPE (arXiv:2402.19173).
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4,
+    d_ff=24576, vocab=49152, mlp_variant="gelu",
+)
+
+REDUCED = ModelConfig(
+    name="starcoder2-15b-reduced", family="dense",
+    n_layers=2, d_model=96, n_heads=6, n_kv_heads=2,
+    d_ff=192, vocab=512, mlp_variant="gelu", remat=False,
+)

@@ -1,0 +1,24 @@
+"""whisper-base [audio] — encoder-decoder backbone (arXiv:2212.04356).
+
+6L (enc) + 6L (dec), d_model=512 8H d_ff=2048 vocab=51865.  The conv/mel
+frontend is a STUB per the assignment: ``input_specs`` supplies precomputed
+frame embeddings (B, 1500, d_model); the transformer backbone (encoder
+self-attn, decoder self+cross attn, KV-cache decode) is fully implemented.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab=51865,
+    is_encoder_decoder=True, n_enc_layers=6, enc_frames=1500,
+    # tiny d_model → dense 4k×4k score matrices dominate memory; chunk early
+    attn_chunk_threshold=2048,
+)
+
+REDUCED = ModelConfig(
+    name="whisper-base-reduced", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=512,
+    is_encoder_decoder=True, n_enc_layers=2, enc_frames=16, remat=False,
+)

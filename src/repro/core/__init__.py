@@ -1,0 +1,35 @@
+"""ParPaRaw core: massively parallel parsing of delimiter-separated data.
+
+Public API re-exports; see DESIGN.md §2 for the module map.
+"""
+from repro.core.dfa import (
+    CONTROL,
+    DATA,
+    FIELD_DELIM,
+    PAD_BYTE,
+    RECORD_DELIM,
+    TERMINATOR_BYTE,
+    Dfa,
+    make_csv_dfa,
+    make_log_dfa,
+    make_simple_dfa,
+)
+from repro.core.parser import Column, ParseResult, Parser, ParserConfig, Schema
+
+__all__ = [
+    "CONTROL",
+    "DATA",
+    "FIELD_DELIM",
+    "PAD_BYTE",
+    "RECORD_DELIM",
+    "TERMINATOR_BYTE",
+    "Dfa",
+    "make_csv_dfa",
+    "make_log_dfa",
+    "make_simple_dfa",
+    "Column",
+    "ParseResult",
+    "Parser",
+    "ParserConfig",
+    "Schema",
+]

@@ -1,0 +1,324 @@
+"""DFA specification for ParPaRaw parsing.
+
+The paper (§3.1) drives parsing with a deterministic finite automaton whose
+transition table is indexed by (state, symbol-group).  Symbol groups collapse
+all byte values with identical transition behaviour (paper §4.5, Table 1) —
+delimiter-separated formats only distinguish a handful of bytes, so the group
+count stays tiny and the whole table fits in registers / SMEM.
+
+Alongside the paper's transition table we carry an *emission* table of the
+same shape that classifies every symbol read in a given state:
+
+    DATA         — part of a field's value
+    FIELD_DELIM  — terminates a field
+    RECORD_DELIM — terminates a record
+    CONTROL      — structural symbol that is not part of any value
+                   (quotes, carriage returns, comment bodies, padding)
+
+The emission table is what the paper calls the "three bitmap indexes"
+(record-delimiter / field-delimiter / control), folded into one uint8 code so
+a single gather produces all three.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+# Symbol classes (values matter: tagging/offsets test them).
+DATA = 0
+FIELD_DELIM = 1
+RECORD_DELIM = 2
+CONTROL = 3
+
+CLASS_NAMES = ("DATA", "FIELD_DELIM", "RECORD_DELIM", "CONTROL")
+
+#: Byte used to pad inputs up to a chunk multiple.  Mapped to its own symbol
+#: group that never changes state and always emits CONTROL.
+PAD_BYTE = 0x00
+
+#: Terminator byte for the inline-terminated CSS tagging mode (paper §4.1
+#: recommends the ASCII unit separator 0x1F).
+TERMINATOR_BYTE = 0x1F
+
+
+@dataclasses.dataclass(frozen=True)
+class Dfa:
+    """A parsing DFA plus the symbol-group byte mapping.
+
+    Attributes:
+      transition: ``(n_states, n_groups) uint8`` — ``T[s, g]`` is the state
+        reached after reading a symbol of group ``g`` in state ``s``.
+      emission:   ``(n_states, n_groups) uint8`` — symbol class emitted when a
+        symbol of group ``g`` is read in state ``s`` (i.e. *before* the
+        transition fires).
+      group_of:   ``(256,) uint8`` — byte value → symbol group.
+      group_bytes: the distinguished bytes, one per non-catch-all group, in
+        group order.  Used by the Pallas kernel's compare-based group matching
+        (the TPU analogue of the paper's SWAR lookup registers).
+      start_state: the sequential DFA's start state.
+      accept:     ``(n_states,) bool`` — states that are valid at end-of-input
+        (after the parser's trailing record-delimiter padding).
+      invalid_state: index of the sink state tracking invalid transitions, or
+        ``None`` for DFAs that accept everything.
+    """
+
+    name: str
+    transition: np.ndarray
+    emission: np.ndarray
+    group_of: np.ndarray
+    group_bytes: Tuple[int, ...]
+    start_state: int
+    accept: np.ndarray
+    invalid_state: Optional[int]
+    state_names: Tuple[str, ...]
+
+    @property
+    def n_states(self) -> int:
+        return self.transition.shape[0]
+
+    @property
+    def n_groups(self) -> int:
+        return self.transition.shape[1]
+
+    def __post_init__(self):
+        t = self.transition
+        e = self.emission
+        assert t.shape == e.shape and t.dtype == np.uint8 and e.dtype == np.uint8
+        assert self.group_of.shape == (256,) and self.group_of.dtype == np.uint8
+        assert int(t.max()) < self.n_states
+        assert int(self.group_of.max()) < self.n_groups
+        assert 0 <= self.start_state < self.n_states
+
+    # The dataclass holds numpy arrays, which do not hash; jit-static plumbing
+    # keys off identity instead.
+    def __hash__(self):  # pragma: no cover - trivial
+        return id(self)
+
+    def __eq__(self, other):  # pragma: no cover - trivial
+        return self is other
+
+    def validate_tables(self) -> None:
+        """Sanity-check table invariants (used by property tests)."""
+        s_inv = self.invalid_state
+        if s_inv is not None:
+            # The invalid state is a sink.
+            assert (self.transition[s_inv] == s_inv).all()
+            # Nothing read in the sink state counts as data or delimiter.
+            assert (self.emission[s_inv] == CONTROL).all()
+
+
+def _lut(groups: dict, n_groups: int, catch_all: int) -> np.ndarray:
+    lut = np.full(256, catch_all, np.uint8)
+    for byte, g in groups.items():
+        lut[byte] = g
+    return lut
+
+
+def make_csv_dfa(
+    delimiter: bytes = b",",
+    quote: bytes = b'"',
+    record_delim: bytes = b"\n",
+    comment: Optional[bytes] = None,
+    handle_cr: bool = True,
+    name: Optional[str] = None,
+) -> Dfa:
+    """RFC 4180 CSV DFA (paper Fig. 2 / Table 1), optionally with line comments.
+
+    States (paper naming):
+      EOR — start of a record (start of input / after a record delimiter)
+      ENC — inside a quote-enclosed field
+      FLD — inside an unquoted field
+      EOF — just after a field delimiter ("end of field")
+      ESC — just read a quote while enclosed (either the closing quote or the
+            first half of an escaped double-quote)
+      INV — invalid-transition sink
+      CMT — inside a line comment (only when ``comment`` is given)
+
+    Groups: record-delim, quote, field-delim, [comment], [CR], PAD, catch-all.
+    """
+    EOR, ENC, FLD, EOF, ESC, INV = range(6)
+    state_names = ["EOR", "ENC", "FLD", "EOF", "ESC", "INV"]
+    CMT = None
+    if comment is not None:
+        CMT = len(state_names)
+        state_names.append("CMT")
+    n_states = len(state_names)
+
+    # --- group layout -------------------------------------------------------
+    group_bytes = [record_delim[0], quote[0], delimiter[0]]
+    G_REC, G_QUO, G_DEL = 0, 1, 2
+    G_CMT = G_CR = G_PAD = None
+    if comment is not None:
+        G_CMT = len(group_bytes)
+        group_bytes.append(comment[0])
+    if handle_cr:
+        G_CR = len(group_bytes)
+        group_bytes.append(0x0D)
+    G_PAD = len(group_bytes)
+    group_bytes.append(PAD_BYTE)
+    G_ANY = len(group_bytes)  # catch-all group has no distinguished byte
+    n_groups = G_ANY + 1
+
+    T = np.full((n_states, n_groups), INV, np.uint8)
+    E = np.full((n_states, n_groups), CONTROL, np.uint8)
+
+    def rule(state, group, new_state, sym_class):
+        T[state, group] = new_state
+        E[state, group] = sym_class
+
+    # Record delimiter.
+    for s in (EOR, FLD, EOF, ESC):
+        rule(s, G_REC, EOR, RECORD_DELIM)
+    rule(ENC, G_REC, ENC, DATA)  # newline inside quotes is data
+    rule(INV, G_REC, INV, CONTROL)
+
+    # Quote.
+    rule(EOR, G_QUO, ENC, CONTROL)   # opening quote
+    rule(EOF, G_QUO, ENC, CONTROL)   # opening quote
+    rule(ENC, G_QUO, ESC, CONTROL)   # tentative closing quote
+    rule(ESC, G_QUO, ENC, DATA)      # doubled quote -> one literal quote
+    rule(FLD, G_QUO, INV, CONTROL)   # RFC4180: no quotes mid-unquoted-field
+    rule(INV, G_QUO, INV, CONTROL)
+
+    # Field delimiter.
+    for s in (EOR, FLD, EOF, ESC):
+        rule(s, G_DEL, EOF, FIELD_DELIM)
+    rule(ENC, G_DEL, ENC, DATA)
+    rule(INV, G_DEL, INV, CONTROL)
+
+    # Catch-all data byte.
+    for s in (EOR, FLD, EOF):
+        rule(s, G_ANY, FLD, DATA)
+    rule(ENC, G_ANY, ENC, DATA)
+    rule(ESC, G_ANY, INV, CONTROL)  # junk after a closing quote
+    rule(INV, G_ANY, INV, CONTROL)
+
+    # Comment handling: '#' at start-of-record opens a comment that swallows
+    # everything up to (and including) its newline; that newline does *not*
+    # delimit a record, so comment lines produce no records at all.  This is
+    # precisely the "more involved parsing rules" case the paper holds up
+    # against format-specific quote-counting tricks (§1, §2).
+    if comment is not None:
+        rule(EOR, G_CMT, CMT, CONTROL)
+        for s in (FLD, EOF):
+            rule(s, G_CMT, FLD, DATA)  # '#' mid-record is plain data
+        rule(ENC, G_CMT, ENC, DATA)
+        rule(ESC, G_CMT, INV, CONTROL)
+        rule(INV, G_CMT, INV, CONTROL)
+        for g in range(n_groups):
+            rule(CMT, g, CMT, CONTROL)
+        rule(CMT, G_REC, EOR, CONTROL)  # closes the comment, emits no record
+        if handle_cr:
+            rule(CMT, G_CR, CMT, CONTROL)
+
+    # Carriage return: structural (part of CRLF) outside quotes, data inside.
+    if handle_cr:
+        for s in (EOR, FLD, EOF, ESC):
+            rule(s, G_CR, s, CONTROL)
+        rule(ENC, G_CR, ENC, DATA)
+        rule(INV, G_CR, INV, CONTROL)
+
+    # Padding byte: inert everywhere.
+    for s in range(n_states):
+        rule(s, G_PAD, s, CONTROL)
+
+    groups = {b: g for g, b in enumerate(group_bytes) if g != G_ANY}
+    accept = np.zeros(n_states, bool)
+    accept[EOR] = True
+
+    return Dfa(
+        name=name or ("csv" if comment is None else "csv+comment"),
+        transition=T,
+        emission=E,
+        group_of=_lut(groups, n_groups, G_ANY),
+        group_bytes=tuple(group_bytes[:-1]),  # drop the catch-all placeholder
+        start_state=EOR,
+        accept=accept,
+        invalid_state=INV,
+        state_names=tuple(state_names),
+    )
+
+
+def make_simple_dfa(
+    delimiter: bytes = b",",
+    record_delim: bytes = b"\n",
+    name: str = "simple",
+) -> Dfa:
+    """Quote-free delimiter format (the constrained baseline competing systems
+    support; paper §2).  Three states so the scan machinery still exercises a
+    non-trivial composite."""
+    EOR, FLD, EOF = 0, 1, 2
+    group_bytes = [record_delim[0], delimiter[0], PAD_BYTE]
+    G_REC, G_DEL, G_PAD, G_ANY = 0, 1, 2, 3
+    n_states, n_groups = 3, 4
+    T = np.zeros((n_states, n_groups), np.uint8)
+    E = np.zeros((n_states, n_groups), np.uint8)
+    for s in (EOR, FLD, EOF):
+        T[s, G_REC], E[s, G_REC] = EOR, RECORD_DELIM
+        T[s, G_DEL], E[s, G_DEL] = EOF, FIELD_DELIM
+        T[s, G_PAD], E[s, G_PAD] = s, CONTROL
+        T[s, G_ANY], E[s, G_ANY] = FLD, DATA
+    accept = np.zeros(n_states, bool)
+    accept[EOR] = True
+    return Dfa(
+        name=name,
+        transition=T,
+        emission=E,
+        group_of=_lut({b: g for g, b in enumerate(group_bytes)}, n_groups, G_ANY),
+        group_bytes=tuple(group_bytes),
+        start_state=EOR,
+        accept=accept,
+        invalid_state=None,
+        state_names=("EOR", "FLD", "EOF"),
+    )
+
+
+def make_log_dfa(name: str = "clf") -> Dfa:
+    """Common-Log-Format-style DFA: space-delimited fields with two distinct
+    quoting scopes — ``[...]`` timestamps and ``"..."`` request strings.
+
+    Demonstrates the paper's applicability claim: multiple independent
+    enclosing contexts, which quote-parity tricks (Mison-style) cannot track.
+    """
+    EOR, FLD, EOF, QUO, BRK = range(5)
+    group_bytes = [0x0A, ord('"'), ord(" "), ord("["), ord("]"), PAD_BYTE]
+    G_REC, G_QUO, G_SP, G_LB, G_RB, G_PAD, G_ANY = range(7)
+    n_states, n_groups = 5, 7
+    T = np.zeros((n_states, n_groups), np.uint8)
+    E = np.zeros((n_states, n_groups), np.uint8)
+
+    def rule(s, g, ns, c):
+        T[s, g], E[s, g] = ns, c
+
+    for s in (EOR, FLD, EOF):
+        rule(s, G_REC, EOR, RECORD_DELIM)
+        rule(s, G_SP, EOF, FIELD_DELIM)
+        rule(s, G_ANY, FLD, DATA)
+        rule(s, G_QUO, QUO, CONTROL)
+        rule(s, G_LB, BRK, CONTROL)
+        rule(s, G_RB, FLD, DATA)  # stray ']' outside brackets: plain data
+        rule(s, G_PAD, s, CONTROL)
+    for g, c in ((G_REC, DATA), (G_SP, DATA), (G_ANY, DATA), (G_LB, DATA),
+                 (G_RB, CONTROL), (G_PAD, CONTROL), (G_QUO, CONTROL)):
+        rule(BRK, g, BRK if g not in (G_RB,) else FLD, c)
+    T[BRK, G_RB] = FLD
+    for g, c in ((G_REC, DATA), (G_SP, DATA), (G_ANY, DATA), (G_LB, DATA),
+                 (G_RB, DATA), (G_PAD, CONTROL), (G_QUO, CONTROL)):
+        rule(QUO, g, QUO if g != G_QUO else FLD, c)
+    T[QUO, G_QUO] = FLD
+
+    accept = np.zeros(n_states, bool)
+    accept[EOR] = True
+    return Dfa(
+        name=name,
+        transition=T,
+        emission=E,
+        group_of=_lut({b: g for g, b in enumerate(group_bytes)}, n_groups, G_ANY),
+        group_bytes=tuple(group_bytes),
+        start_state=EOR,
+        accept=accept,
+        invalid_state=None,
+        state_names=("EOR", "FLD", "EOF", "QUO", "BRK"),
+    )

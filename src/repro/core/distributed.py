@@ -1,0 +1,191 @@
+"""Multi-device ParPaRaw: the paper's scans stretched across a TPU mesh.
+
+The single-device pipeline needs three pieces of global information that
+cross shard boundaries, each a tiny associative summary per device:
+
+    1. the DFA state-transition composite      — (|S|,) int32
+    2. the record count                        — ()   int32
+    3. the (abs/rel, column-offset) pair       — 2 ×  int32
+
+Inside ``shard_map`` every device folds its local chunks, ``all_gather``s
+the per-device summaries (O(devices · |S|) bytes — independent of input
+size), computes its exclusive prefix locally, and proceeds exactly like the
+single-device parser.  This is the collective-level instance of the paper's
+decoupled-lookback scan (DESIGN.md §3), and the reason throughput scales
+linearly with device count: per-device work is N/D bytes, the stitching
+collective is constant.
+
+Each device emits its own columnar shard (per-host Arrow batches — what a
+real ingest pipeline wants); record ids are global so shards concatenate
+trivially.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import fields as fields_mod
+from repro.core import offsets as offsets_mod
+from repro.core import partition as partition_mod
+from repro.core import tagging as tagging_mod
+from repro.core import transition as tr
+from repro.core import typeconv as typeconv_mod
+from repro.core.dfa import Dfa
+from repro.core.parser import ParserConfig
+
+
+class ShardedParse(NamedTuple):
+    """Per-device columnar shard with globally consistent record ids."""
+
+    classes: jax.Array       # (C_local·K,) uint8 per device (global: (C·K,))
+    css: jax.Array           # (N_local,) uint8 partitioned symbols
+    col_start: jax.Array     # (n_cols+1,) int32 per shard
+    col_count: jax.Array     # (n_cols+1,) int32
+    field_offset: jax.Array  # (n_cols, max_records) int32, local CSS positions
+    field_length: jax.Array  # (n_cols, max_records) int32
+    rec_base: jax.Array      # () int32 — first global record id in this shard
+    n_records: jax.Array     # () int32 — global record count (replicated)
+
+
+def _device_prefix_vec(local_comp: jax.Array, axis: str) -> jax.Array:
+    """Exclusive composite of all preceding devices' transition summaries."""
+    all_comps = jax.lax.all_gather(local_comp, axis)  # (D, S)
+    inc = jax.lax.associative_scan(tr.compose, all_comps, axis=0)
+    me = jax.lax.axis_index(axis)
+    ident = tr.identity_vector(local_comp.shape[-1])
+    prev = inc[jnp.maximum(me - 1, 0)]
+    return jnp.where(me == 0, ident, prev)
+
+
+def _device_prefix_offsets(rec: jax.Array, col_t: jax.Array, col_o: jax.Array, axis: str):
+    """Exclusive record-count and column-offset prefixes across devices."""
+    all_rec = jax.lax.all_gather(rec, axis)          # (D,)
+    me = jax.lax.axis_index(axis)
+    rec_prefix = (jnp.cumsum(all_rec) - all_rec)[me]
+    n_total = jnp.sum(all_rec)
+
+    all_t = jax.lax.all_gather(col_t, axis)
+    all_o = jax.lax.all_gather(col_o, axis)
+    t_inc, o_inc = jax.lax.associative_scan(offsets_mod.combine_col, (all_t, all_o), axis=0)
+    prev_t = t_inc[jnp.maximum(me - 1, 0)]
+    prev_o = o_inc[jnp.maximum(me - 1, 0)]
+    t = jnp.where(me == 0, offsets_mod.REL, prev_t)
+    o = jnp.where(me == 0, 0, prev_o)
+    return rec_prefix, t, o, n_total
+
+
+def _shard_parse(chunks: jax.Array, cfg: ParserConfig, axis: str) -> ShardedParse:
+    """Runs on every device under shard_map; ``chunks (C_local, K)``."""
+    dfa = cfg.dfa
+    n_cols = cfg.schema.n_cols
+
+    # ---- §3.1 across the mesh: context determination --------------------
+    groups = tr.byte_groups(chunks, dfa)
+    vecs = tr.chunk_transition_vectors(groups, dfa)
+    local_comp = tr.fold_vectors(vecs)
+    prefix = _device_prefix_vec(local_comp, axis)
+    local_excl = tr.exclusive_scan_vectors(vecs, use_matmul=cfg.use_matmul_scan)
+    # apply the cross-device prefix first, then the local exclusive composite
+    scanned = tr.compose(jnp.broadcast_to(prefix, local_excl.shape), local_excl)
+    start = tr.start_states(scanned, dfa)
+    classes, _, _ = tr.replay(groups, start, dfa)
+
+    # ---- §3.2 across the mesh: record/column offsets ---------------------
+    summ = offsets_mod.chunk_summaries(classes)
+    rec_l, t_l, o_l = offsets_mod.fold_summary(summ)
+    rec_base, t_p, o_p, n_total = _device_prefix_offsets(rec_l, t_l, o_l, axis)
+
+    local_offs = offsets_mod.scan_chunk_offsets(summ)
+    g_t, g_o = offsets_mod.combine_col(
+        (jnp.broadcast_to(t_p, local_offs.col_tag.shape),
+         jnp.broadcast_to(o_p, local_offs.col_offset.shape)),
+        (local_offs.col_tag, local_offs.col_offset),
+    )
+    offs = offsets_mod.ChunkOffsets(local_offs.rec_offset + rec_base, g_t, g_o)
+    ids = offsets_mod.symbol_ids_from_chunks(classes, offs)
+
+    # ---- §3.3 locally: tagging, partition, field index -------------------
+    flat_classes = classes.reshape(-1)
+    # Record tags are shard-local (0-based) so the field index stays small;
+    # rec_base restores global ids.
+    local_rec = ids.record_id - rec_base
+    tagged = tagging_mod.tag_symbols(
+        chunks, flat_classes, local_rec, ids.column_id, n_cols, cfg.tagging
+    )
+    part = partition_mod.PARTITION_IMPLS[cfg.partition_impl](tagged.col_tag, n_cols)
+    if cfg.tagging == "tagged":
+        css, rec_sorted, col_sorted = partition_mod.apply_partition(
+            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag
+        )
+        flag_sorted = jnp.zeros_like(css, dtype=bool)
+    else:
+        css, rec_sorted, col_sorted, flag_sorted = partition_mod.apply_partition(
+            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag, tagged.delim_flag
+        )
+    if cfg.tagging == "tagged":
+        findex = fields_mod.field_index_tagged(col_sorted, rec_sorted, n_cols, cfg.max_records)
+    else:
+        findex = fields_mod.field_index_terminated(
+            flag_sorted, col_sorted, rec_sorted, part.col_start, n_cols, cfg.max_records
+        )
+
+    return ShardedParse(
+        classes=flat_classes,
+        css=css,
+        col_start=part.col_start,
+        col_count=part.col_count,
+        field_offset=findex.offset,
+        field_length=findex.length,
+        rec_base=rec_base.reshape(1),  # rank-1 so shards concatenate
+        n_records=n_total,
+    )
+
+
+class DistributedParser:
+    """shard_map-wrapped ParPaRaw over a device mesh.
+
+    ``max_records`` in the config is *per shard* here.  The input byte
+    buffer is sharded along its chunk axis over ``axis_names`` (all data
+    axes flattened); outputs keep the same sharding, one columnar shard per
+    device.
+    """
+
+    def __init__(self, cfg: ParserConfig, mesh: Mesh, axis_names: Sequence[str] = ("data",)):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names)
+        axis = self.axis_names
+        spec_in = P(axis, None)
+        out_specs = ShardedParse(
+            classes=P(axis),
+            css=P(axis),
+            col_start=P(axis),
+            col_count=P(axis),
+            field_offset=P(axis, None),
+            field_length=P(axis, None),
+            rec_base=P(axis),
+            n_records=P(),
+        )
+
+        def wrapped(chunks):
+            return _shard_parse(chunks, cfg, axis)
+
+        self._fn = jax.jit(
+            shard_map(
+                wrapped, mesh=mesh, in_specs=(spec_in,), out_specs=out_specs,
+                check_rep=False,
+            )
+        )
+
+    def parse_chunks(self, chunks) -> ShardedParse:
+        return self._fn(chunks)
+
+    def lower(self, n_chunks: int, chunk_bytes: int):
+        """ShapeDtypeStruct lowering hook for the dry-run harness."""
+        spec = jax.ShapeDtypeStruct((n_chunks, chunk_bytes), jnp.uint8)
+        return self._fn.lower(spec)

@@ -1,0 +1,265 @@
+"""End-to-end single-device ParPaRaw parse pipeline (paper §3).
+
+Pipeline (all on-device, one jit):
+
+    bytes ─▶ symbol groups ─▶ chunk transition vectors ─▶ composite scan
+          ─▶ replay (class codes) ─▶ record/column ids ─▶ tagging
+          ─▶ stable partition (CSS) ─▶ field index ─▶ type conversion
+          ─▶ validation
+
+Static configuration (DFA, schema, chunk size, capacities) is baked into the
+jitted closure; the only traced input is the padded byte buffer, so repeated
+parses of same-shaped partitions reuse one executable — the property the
+streaming layer (core/streaming.py) relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fields as fields_mod
+from repro.core import offsets as offsets_mod
+from repro.core import partition as partition_mod
+from repro.core import tagging as tagging_mod
+from repro.core import transition as transition_mod
+from repro.core import typeconv as typeconv_mod
+from repro.core import validation as validation_mod
+from repro.core.dfa import PAD_BYTE, Dfa
+
+
+@dataclasses.dataclass(frozen=True)
+class Column:
+    name: str
+    dtype: str = "str"  # int32 | float32 | date | str
+    selected: bool = True  # paper §4.3: deselected columns' symbols are
+                           # marked irrelevant at tagging and never partake
+                           # in partitioning/typeconv
+
+    def __post_init__(self):
+        assert self.dtype in typeconv_mod.PARSERS, self.dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    columns: Tuple[Column, ...]
+
+    @classmethod
+    def of(cls, *cols: Tuple[str, str]) -> "Schema":
+        return cls(tuple(Column(n, d) for n, d in cols))
+
+    @property
+    def n_cols(self) -> int:
+        return len(self.columns)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParserConfig:
+    dfa: Dfa
+    schema: Schema
+    max_records: int
+    chunk_size: int = 64
+    tagging: str = "tagged"          # tagged | inline | vector
+    partition_impl: str = "scatter"  # scatter | argsort
+    use_matmul_scan: bool = False
+    int_width: int = 11
+    float_width: int = 24
+    validate_columns: bool = False
+
+    @property
+    def record_delim_byte(self) -> int:
+        return self.dfa.group_bytes[0]
+
+
+class ParseResult(NamedTuple):
+    css: jax.Array                       # (N,) uint8 partitioned symbols
+    col_start: jax.Array                 # (n_cols+1,) int32
+    col_count: jax.Array                 # (n_cols+1,) int32
+    field_offset: jax.Array              # (n_cols, max_records) int32
+    field_length: jax.Array              # (n_cols, max_records) int32
+    values: Dict[str, typeconv_mod.Parsed]
+    validation: validation_mod.Validation
+    end_state: jax.Array                 # () int32 — carried into next partition
+    last_record_end: jax.Array           # () int32 — byte pos of last record
+                                         # delimiter (−1 if none); the
+                                         # streaming carry-over boundary
+
+
+def _parse_impl(raw_chunks: jax.Array, cfg: ParserConfig,
+                initial_state: jax.Array) -> ParseResult:
+    dfa = cfg.dfa
+    n_cols = cfg.schema.n_cols
+
+    # §3.1 — parsing context via composite scan, then replay.
+    groups = transition_mod.byte_groups(raw_chunks, dfa)
+    vecs = transition_mod.chunk_transition_vectors(groups, dfa)
+    scanned = transition_mod.exclusive_scan_vectors(vecs, use_matmul=cfg.use_matmul_scan)
+    start = transition_mod.start_states(scanned, dfa, initial_state=initial_state)
+    classes, chunk_end, saw_invalid = transition_mod.replay(groups, start, dfa)
+    end_state = chunk_end[-1]
+
+    # §3.2 — record/column identification.
+    flat_classes = classes.reshape(-1)
+    ids = offsets_mod.symbol_ids(flat_classes)
+
+    # §3.2/§4.1 — tagging (+ §4.3 column projection).
+    selected = None
+    if not all(c.selected for c in cfg.schema.columns):
+        selected = np.asarray([c.selected for c in cfg.schema.columns])
+    tagged = tagging_mod.tag_symbols(
+        raw_chunks, flat_classes, ids.record_id, ids.column_id, n_cols,
+        cfg.tagging, selected_mask=selected,
+    )
+
+    # §3.3 — stable partition into per-column CSS.
+    part = partition_mod.PARTITION_IMPLS[cfg.partition_impl](tagged.col_tag, n_cols)
+    if cfg.tagging == "tagged":
+        # delim_flag is structurally all-False in tagged mode: skip one
+        # N-sized gather+write (EXPERIMENTS.md §Perf parser iteration)
+        css, rec_sorted, col_sorted = partition_mod.apply_partition(
+            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag
+        )
+        flag_sorted = jnp.zeros_like(css, dtype=bool)
+    else:
+        css, rec_sorted, col_sorted, flag_sorted = partition_mod.apply_partition(
+            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag, tagged.delim_flag
+        )
+
+    # §3.3 — field index.
+    if cfg.tagging == "tagged":
+        findex = fields_mod.field_index_tagged(col_sorted, rec_sorted, n_cols, cfg.max_records)
+    else:
+        findex = fields_mod.field_index_terminated(
+            flag_sorted, col_sorted, rec_sorted, part.col_start, n_cols, cfg.max_records
+        )
+
+    # §3.3 — type conversion.
+    values = {}
+    for c, col in enumerate(cfg.schema.columns):
+        if not col.selected:
+            continue
+        off = findex.offset[c]
+        ln = findex.length[c]
+        if col.dtype == "int32":
+            values[col.name] = typeconv_mod.parse_int(css, off, ln, width=cfg.int_width)
+        elif col.dtype == "float32":
+            values[col.name] = typeconv_mod.parse_float(css, off, ln, width=cfg.float_width)
+        elif col.dtype == "date":
+            values[col.name] = typeconv_mod.parse_date(css, off, ln)
+        else:
+            values[col.name] = typeconv_mod.parse_string_noop(css, off, ln)
+
+    # §4.3 — validation.
+    val = validation_mod.validate(
+        flat_classes, ids.record_id, end_state, saw_invalid, dfa, cfg.max_records,
+        expected_columns=n_cols if cfg.validate_columns else None,
+    )
+
+    # Streaming support (paper §4.4): byte position of the last record
+    # delimiter — everything after it is the next partition's carry-over.
+    pos = jnp.arange(flat_classes.shape[0], dtype=jnp.int32)
+    from repro.core.dfa import RECORD_DELIM as _RD
+    last_rec = jnp.max(jnp.where(flat_classes == _RD, pos, -1))
+
+    return ParseResult(
+        css=css,
+        col_start=part.col_start,
+        col_count=part.col_count,
+        field_offset=findex.offset,
+        field_length=findex.length,
+        values=values,
+        validation=val,
+        end_state=end_state.astype(jnp.int32),
+        last_record_end=last_rec.astype(jnp.int32),
+    )
+
+
+class Parser:
+    """User-facing parser: host-side input prep + one jitted device pipeline."""
+
+    def __init__(self, cfg: ParserConfig):
+        self.cfg = cfg
+        self._jit = jax.jit(lambda chunks, st: _parse_impl(chunks, cfg, st))
+
+    # -- host-side -----------------------------------------------------------
+    def prepare(self, data: bytes, pad_to: Optional[int] = None) -> np.ndarray:
+        """bytes → ``(n_chunks, chunk_size) uint8`` with trailing record
+        delimiter + PAD padding.  ``pad_to`` fixes the total byte capacity so
+        different partitions share one compiled shape."""
+        k = self.cfg.chunk_size
+        raw = np.frombuffer(data, np.uint8)
+        need_delim = raw.size == 0 or raw[-1] != self.cfg.record_delim_byte
+        n = raw.size + (1 if need_delim else 0)
+        total = pad_to if pad_to is not None else ((n + k - 1) // k) * k
+        if total < n:
+            raise ValueError(f"pad_to={pad_to} smaller than input ({n} bytes)")
+        buf = np.full(total, PAD_BYTE, np.uint8)
+        buf[: raw.size] = raw
+        if need_delim:
+            buf[raw.size] = self.cfg.record_delim_byte
+        return buf.reshape(-1, k)
+
+    # -- device-side ---------------------------------------------------------
+    def parse_chunks(self, chunks, initial_state: Optional[jax.Array] = None) -> ParseResult:
+        if initial_state is None:
+            initial_state = jnp.int32(self.cfg.dfa.start_state)
+        return self._jit(jnp.asarray(chunks), jnp.asarray(initial_state, jnp.int32))
+
+    def parse(self, data: bytes) -> ParseResult:
+        return self.parse_chunks(self.prepare(data))
+
+    def infer_types(self, result: ParseResult):
+        """Paper §4.3 type inference: min numeric type per column via a
+        parallel reduction over the already-columnar CSS."""
+        out = {}
+        for c, col in enumerate(self.cfg.schema.columns):
+            if not col.selected:
+                continue
+            n = self.cfg.max_records
+            present = jnp.arange(n) < result.validation.n_records
+            code = typeconv_mod.infer_column_type(
+                result.css, result.field_offset[c], result.field_length[c],
+                present, width=self.cfg.float_width,
+            )
+            out[col.name] = typeconv_mod.TYPE_CODES[int(code)]
+        return out
+
+    # -- export --------------------------------------------------------------
+    def to_arrow(self, result: ParseResult) -> Dict[str, dict]:
+        """Arrow-layout host export: per column a dict with ``validity``
+        (packed bits), plus either ``values`` (numeric) or
+        ``offsets``+``data`` (strings).  No pyarrow dependency; layouts match
+        the Arrow columnar spec so buffers can be zero-copy wrapped."""
+        n = int(result.validation.n_records)
+        n = min(n, self.cfg.max_records)
+        out = {}
+        css = np.asarray(result.css)
+        for c, col in enumerate(self.cfg.schema.columns):
+            if not col.selected:
+                continue
+            parsed = result.values[col.name]
+            if col.dtype == "str":
+                ln = np.asarray(result.field_length[c][:n], np.int32)
+                start = int(result.col_start[c])
+                count = int(result.col_count[c])
+                offsets = np.zeros(n + 1, np.int32)
+                np.cumsum(ln, out=offsets[1:])
+                data = css[start : start + count]
+                if self.cfg.tagging != "tagged":
+                    # Terminators/delimiters live inside the CSS in these
+                    # modes; re-gather the value bytes densely for export.
+                    off_abs = np.asarray(result.field_offset[c][:n])
+                    pieces = [css[o : o + l] for o, l in zip(off_abs, ln)]
+                    data = np.concatenate(pieces) if pieces else np.zeros(0, np.uint8)
+                validity = ~np.asarray(parsed.empty[:n])
+                out[col.name] = dict(offsets=offsets, data=data, validity=np.packbits(validity, bitorder="little"))
+            else:
+                validity = np.asarray(parsed.valid[:n])
+                out[col.name] = dict(
+                    values=np.asarray(parsed.value[:n]),
+                    validity=np.packbits(validity, bitorder="little"),
+                )
+        return out

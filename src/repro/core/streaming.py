@@ -1,0 +1,180 @@
+"""End-to-end streaming parse (paper §4.4).
+
+The paper overlaps three pipeline stages per partition — transfer in, parse,
+return — on the PCIe bus's full-duplex channels with a device-side double
+buffer and a *carry-over*: the trailing incomplete record of partition *i*
+is prepended to partition *i+1*.
+
+JAX mapping (DESIGN.md §3): XLA's async dispatch is the stream engine.
+``device_put`` of partition *i+1* and the host-side read-back of partition
+*i−1*'s results both overlap the device parse of partition *i*; the only
+synchronisation is fetching the scalar ``last_record_end`` (the carry
+boundary), mirroring the carry-copy dependency edge in the paper's Fig. 7.
+Because every partition reuses one compiled executable (static capacity),
+there is no recompilation in the steady state.
+
+The carry boundary comes from parse *metadata*, not from a host ``rfind``:
+a newline inside a quoted field must not be mistaken for a record boundary,
+which is exactly the context problem the paper solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dfa import PAD_BYTE
+from repro.core.parser import ParseResult, Parser
+
+
+@dataclasses.dataclass
+class StreamStats:
+    partitions: int = 0
+    bytes_in: int = 0
+    records: int = 0
+    max_carry: int = 0
+
+
+class StreamingParser:
+    """Partition-pipelined parser with carry-over record stitching.
+
+    Args:
+      parser: a configured single-device :class:`Parser`; its
+        ``max_records`` bounds records *per partition*.
+      partition_bytes: raw bytes consumed from the source per partition.
+      max_carry_bytes: capacity reserved for the carry-over (longest record
+        the stream may contain, paper's carry-over allocation).
+    """
+
+    def __init__(self, parser: Parser, partition_bytes: int,
+                 max_carry_bytes: Optional[int] = None):
+        self.parser = parser
+        self.partition_bytes = int(partition_bytes)
+        self.max_carry_bytes = int(max_carry_bytes or partition_bytes)
+        k = parser.cfg.chunk_size
+        cap = self.partition_bytes + self.max_carry_bytes + 1
+        self.capacity = ((cap + k - 1) // k) * k
+        self.stats = StreamStats()
+
+    def _buf_to_chunks(self, buf: bytes, final: bool) -> np.ndarray:
+        k = self.parser.cfg.chunk_size
+        raw = np.frombuffer(buf, np.uint8)
+        out = np.full(self.capacity, PAD_BYTE, np.uint8)
+        out[: raw.size] = raw
+        if final and raw.size and raw[-1] != self.parser.cfg.record_delim_byte:
+            out[raw.size] = self.parser.cfg.record_delim_byte
+        return out.reshape(-1, k)
+
+    def parse_stream(
+        self, source: Iterable[bytes]
+    ) -> Iterator[Tuple[ParseResult, int]]:
+        """Yields ``(result, n_complete_records)`` per partition.
+
+        Only records ``[0, n_complete)`` of each result are complete; the
+        trailing bytes re-appear at the front of the next partition.
+        """
+        carry = b""
+        it = iter(source)
+        pending = None  # (result, carry_len_if_final_known)
+        buf = b""
+        exhausted = False
+        while True:
+            # fill the partition
+            while not exhausted and len(buf) < self.partition_bytes:
+                try:
+                    buf += next(it)
+                except StopIteration:
+                    exhausted = True
+            take = buf[: self.partition_bytes]
+            buf = buf[self.partition_bytes:]
+            if not take and not carry:
+                break
+            final = exhausted and not buf
+            full = carry + take
+            if len(full) > self.capacity:
+                raise ValueError(
+                    f"record longer than capacity ({len(full)} > {self.capacity}); "
+                    "increase max_carry_bytes"
+                )
+            chunks = self._buf_to_chunks(full, final)
+            # async dispatch: the device parses while the host assembles the
+            # next partition; only the carry boundary scalar synchronises.
+            result = self.parser.parse_chunks(jnp.asarray(chunks))
+            last = int(result.last_record_end)
+            n_complete = int(result.validation.n_records)
+            if last < 0:
+                carry = full  # no complete record in this partition
+            else:
+                carry = full[last + 1:]
+            self.stats.partitions += 1
+            self.stats.bytes_in += len(take)
+            self.stats.records += n_complete
+            self.stats.max_carry = max(self.stats.max_carry, len(carry))
+            yield result, n_complete
+            if final:
+                if carry and last >= 0:
+                    # only PADs followed the final record delimiter; the
+                    # appended delimiter (``final=True``) already flushed the
+                    # tail record, so any remaining carry is stale.
+                    pass
+                break
+
+    def parse_all(self, source: Iterable[bytes]):
+        """Convenience: fully consume the stream, returning concatenated
+        per-column host arrays (Arrow layout, like ``Parser.to_arrow``)."""
+        schema = self.parser.cfg.schema
+        acc = {c.name: [] for c in schema.columns}
+        for result, n in self.parse_stream(source):
+            arrow = self.parser.to_arrow(result)
+            for c in schema.columns:
+                acc[c.name].append(_trim(arrow[c.name], n))
+        return {name: _concat(parts) for name, parts in acc.items()}
+
+
+def _trim(arrow_col: dict, n: int) -> dict:
+    if "values" in arrow_col:
+        return dict(values=arrow_col["values"][:n],
+                    validity=arrow_col["validity"], n=n)
+    offsets = arrow_col["offsets"][: n + 1]
+    return dict(offsets=offsets, data=arrow_col["data"][: offsets[-1] if n else 0],
+                validity=arrow_col["validity"], n=n)
+
+
+def _unpack_bits(packed: np.ndarray, n: int) -> np.ndarray:
+    return np.unpackbits(packed, bitorder="little")[:n].astype(bool)
+
+
+def _concat(parts) -> dict:
+    if not parts:
+        return {}
+    if "values" in parts[0]:
+        values = np.concatenate([p["values"][: p["n"]] for p in parts])
+        validity = np.concatenate([_unpack_bits(p["validity"], p["n"]) for p in parts])
+        return dict(values=values, validity=validity)
+    datas, offs, vals = [], [np.zeros(1, np.int64)], []
+    base = 0
+    for p in parts:
+        n = p["n"]
+        o = p["offsets"].astype(np.int64)
+        offs.append(o[1 : n + 1] + base)
+        datas.append(p["data"][: o[n]])
+        vals.append(_unpack_bits(p["validity"], n))
+        base += int(o[n])
+    return dict(
+        offsets=np.concatenate(offs),
+        data=np.concatenate(datas) if datas else np.zeros(0, np.uint8),
+        validity=np.concatenate(vals),
+    )
+
+
+def iter_file(path: str, read_bytes: int = 1 << 20) -> Iterator[bytes]:
+    """Simple file source for ``parse_stream``."""
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(read_bytes)
+            if not b:
+                return
+            yield b

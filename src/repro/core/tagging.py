@@ -1,0 +1,92 @@
+"""Symbol tagging and the paper's alternative tagging modes (§3.2, §4.1).
+
+Every symbol receives a column tag and a record tag.  Symbols that do not
+contribute to any column's value stream (quotes, comments, CR, padding —
+class CONTROL) get the sentinel column ``n_cols`` so the partition step
+groups them past all real columns, where they are simply ignored
+("irrelevant symbols", paper §4.3).
+
+Modes:
+  * ``tagged``  — value symbols only; 4-byte record tags travel with them.
+  * ``inline``  — field/record delimiters are kept, re-written to the
+    0x1F terminator, and tagged with the column they terminate.  The CSS
+    index then falls out of terminator positions; record tags are not needed
+    downstream (paper Fig. 6 left).
+  * ``vector``  — like ``inline`` but the original delimiter bytes survive
+    and a parallel boolean vector marks them (paper Fig. 6 right); for
+    inputs whose values may legitimately contain 0x1F.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dfa import (
+    CONTROL,
+    DATA,
+    FIELD_DELIM,
+    RECORD_DELIM,
+    TERMINATOR_BYTE,
+)
+
+TAGGING_MODES = ("tagged", "inline", "vector")
+
+
+class TaggedSymbols(NamedTuple):
+    symbol: jax.Array      # (N,) uint8 — possibly rewritten symbol stream
+    col_tag: jax.Array     # (N,) int32 — column, or n_cols sentinel to drop
+    rec_tag: jax.Array     # (N,) int32 — record id
+    delim_flag: jax.Array  # (N,) bool  — field-terminator marker (vector mode)
+
+
+def tag_symbols(
+    raw: jax.Array,
+    classes: jax.Array,
+    record_id: jax.Array,
+    column_id: jax.Array,
+    n_cols: int,
+    mode: str = "tagged",
+    selected_mask=None,
+    skip_records=None,
+) -> TaggedSymbols:
+    """Assign (column, record) tags per symbol under the given mode.
+
+    Columns ≥ ``n_cols`` (ragged records wider than the schema) are also
+    dropped to the sentinel partition; validation reports them separately.
+
+    Paper §4.3 projections: ``selected_mask`` ((n_cols,) bool) drops
+    deselected columns' symbols as irrelevant; ``skip_records`` ((R,) bool,
+    True = drop) does the same per record — both fold into the same sentinel
+    tag, so projection is free at partition time.
+    """
+    if mode not in TAGGING_MODES:
+        raise ValueError(f"unknown tagging mode {mode!r}")
+    raw = raw.reshape(-1)
+    classes = classes.reshape(-1)
+    is_data = classes == DATA
+    is_delim = (classes == FIELD_DELIM) | (classes == RECORD_DELIM)
+
+    if mode == "tagged":
+        keep = is_data
+        symbol = raw
+        delim_flag = jnp.zeros_like(keep)
+    elif mode == "inline":
+        keep = is_data | is_delim
+        symbol = jnp.where(is_delim, jnp.uint8(TERMINATOR_BYTE), raw)
+        delim_flag = is_delim
+    else:  # vector
+        keep = is_data | is_delim
+        symbol = raw
+        delim_flag = is_delim
+
+    in_schema = column_id < n_cols
+    if selected_mask is not None:
+        sel = jnp.asarray(selected_mask)
+        in_schema &= sel[jnp.clip(column_id, 0, n_cols - 1)]
+    if skip_records is not None:
+        r = jnp.asarray(skip_records)
+        in_schema &= ~r[jnp.clip(record_id, 0, r.shape[0] - 1)]
+    col_tag = jnp.where(keep & in_schema, column_id, n_cols).astype(jnp.int32)
+    return TaggedSymbols(symbol, col_tag, record_id.astype(jnp.int32), delim_flag)

@@ -1,0 +1,85 @@
+"""Synthetic delimiter-separated datasets mirroring the paper's two
+evaluation workloads (§5):
+
+  * ``yelp_like``   — few long text-heavy columns, quoted fields containing
+    delimiters/newlines (avg ~720 B/record);
+  * ``taxi_like``   — many short numeric/temporal columns
+    (avg ~88 B/record, ~5 B/field) stressing type conversion.
+
+Used by benchmarks (paper Figs. 9–13 analogues), tests, and the training
+examples' data pipeline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_WORDS = (
+    "the food was great amazing terrible service slow fast delicious cold "
+    "warm friendly staff would recommend never again five stars one star "
+    "best worst pizza burger sushi coffee place downtown"
+).split()
+
+
+def yelp_like(rng: np.random.Generator, n_records: int, avg_text: int = 600) -> bytes:
+    """id,stars,useful,text,date — text quoted with embedded ',' '\\n' '\"'."""
+    rows = []
+    for i in range(n_records):
+        n_words = max(3, int(rng.poisson(avg_text / 6)))
+        words = rng.choice(_WORDS, size=n_words)
+        text = " ".join(words.tolist())
+        # sprinkle structural characters inside the quoted text
+        if rng.random() < 0.8:
+            text += ", really"
+        if rng.random() < 0.5:
+            text += "\nsecond line"
+        if rng.random() < 0.3:
+            text += ' said ""wow"" loudly'
+        stars = rng.integers(1, 6)
+        useful = rng.integers(0, 100)
+        date = f"{rng.integers(2005, 2022):04d}-{rng.integers(1, 13):02d}-{rng.integers(1, 29):02d}"
+        rows.append(f'{i},{stars},{useful},"{text}",{date}\n')
+    return "".join(rows).encode()
+
+
+YELP_SCHEMA = (("id", "int32"), ("stars", "int32"), ("useful", "int32"),
+               ("text", "str"), ("date", "date"))
+
+
+def taxi_like(rng: np.random.Generator, n_records: int) -> bytes:
+    """17 short numeric/temporal columns (NYC-taxi-shaped)."""
+    rows = []
+    for i in range(n_records):
+        t0 = (f"{rng.integers(2018, 2019):04d}-{rng.integers(1, 13):02d}-"
+              f"{rng.integers(1, 29):02d} {rng.integers(0, 24):02d}:"
+              f"{rng.integers(0, 60):02d}:{rng.integers(0, 60):02d}")
+        vals = [
+            str(rng.integers(1, 3)), t0, t0,
+            str(rng.integers(1, 7)),
+            f"{rng.random() * 30:.2f}",
+            str(rng.integers(1, 265)), str(rng.integers(1, 265)),
+            str(rng.integers(1, 5)),
+            f"{rng.random() * 80:.2f}", f"{rng.random() * 5:.2f}",
+            f"{rng.random() * 0.5:.2f}", f"{rng.random() * 20:.2f}",
+            f"{rng.random() * 10:.2f}", "0.3",
+            f"{rng.random() * 100:.2f}", str(rng.integers(0, 3)),
+            f"{rng.random():.2f}",
+        ]
+        rows.append(",".join(vals) + "\n")
+    return "".join(rows).encode()
+
+
+TAXI_SCHEMA = tuple(
+    [("vendor", "int32"), ("pickup", "date"), ("dropoff", "date"),
+     ("passengers", "int32"), ("distance", "float32"),
+     ("pu_loc", "int32"), ("do_loc", "int32"), ("ratecode", "int32"),
+     ("fare", "float32"), ("extra", "float32"), ("mta", "float32"),
+     ("tip", "float32"), ("tolls", "float32"), ("surcharge", "float32"),
+     ("total", "float32"), ("payment", "int32"), ("congestion", "float32")]
+)
+
+
+def skewed(rng: np.random.Generator, n_records: int, big_bytes: int = 1 << 20) -> bytes:
+    """Paper Fig. 11 (right): one giant record among normal ones."""
+    data = yelp_like(rng, n_records // 2)
+    big = b'999999,5,0,"' + b"x" * big_bytes + b'",2020-01-01\n'
+    return data + big + yelp_like(rng, n_records - n_records // 2 - 1)

@@ -1,0 +1,3 @@
+from repro.kernels.dfa_scan.ops import chunk_vectors, parse_classes, replay, replay_fused
+
+__all__ = ["chunk_vectors", "parse_classes", "replay", "replay_fused"]

@@ -1,0 +1,255 @@
+"""Pallas TPU kernels for ParPaRaw's per-chunk DFA simulation (paper §3.1).
+
+Two kernels:
+
+  * ``chunk_vectors_kernel`` — the |S|-simultaneous-DFA pass: every chunk
+    folds its symbols into a state-transition vector.  Chunks ride the VPU
+    lanes (``block_chunks`` per grid step); the state axis (|S| ≤ 8) is a
+    short trailing axis.
+  * ``replay_kernel`` — the second pass: one DFA per chunk from its true
+    start state, emitting the symbol-class code stream.
+
+TPU adaptation notes (DESIGN.md §3):
+  * Symbol→group matching is branchless broadcast-compare against the DFA's
+    distinguished bytes — the VPU-native analogue of the paper's SWAR
+    LU-register trick.  No 256-entry LUT gather in the hot loop.
+  * The state-transition table is applied via one-hot select chains
+    (``Σ_g (g==g')·T[:,g']`` then ``Σ_s (v==s')·row[s']``): TPU vector lanes
+    cannot dynamically index VMEM per-lane (the role MFIRA's BFI/BFE played
+    on GPU), but |S|·|G| ≤ 64 makes select chains cheap and fully vector.
+  * The symbol loop is a ``fori_loop`` over the chunk byte axis with dynamic
+    slicing — VMEM-resident, no HBM traffic inside the loop.
+
+Weak-scaling shape contract: ``chunks (C, K) uint8`` with C a multiple of
+``block_chunks``; callers pad (identity vectors / PAD bytes are inert).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.dfa import Dfa
+
+DEFAULT_BLOCK_CHUNKS = 256
+
+
+def _group_select(bytes_i32, group_bytes, n_groups):
+    """Branchless group id for a vector of bytes (SWAR analogue)."""
+    g = jnp.full(bytes_i32.shape, n_groups - 1, jnp.int32)  # catch-all
+    for gi, b in enumerate(group_bytes):
+        g = jnp.where(bytes_i32 == b, gi, g)
+    return g
+
+
+def _make_chunk_vectors_kernel(dfa: Dfa, block_chunks: int, chunk_bytes: int):
+    S, G = dfa.n_states, dfa.n_groups
+    group_bytes = dfa.group_bytes
+
+    def kernel(chunks_ref, tt_ref, out_ref):
+        data = chunks_ref[...].astype(jnp.int32)  # (BC, K)
+        tt = tt_ref[...]  # (S, G) int32, VMEM-resident across the whole loop
+
+        def body(k, vec):
+            byte = jax.lax.dynamic_slice(data, (0, k), (block_chunks, 1))[:, 0]
+            g = _group_select(byte, group_bytes, G)  # (BC,)
+            # Tg[c, s'] = T[s', g[c]]  via one-hot select over groups.
+            tg = jnp.zeros((block_chunks, S), jnp.int32)
+            for gi in range(G):
+                tg = jnp.where((g == gi)[:, None], tt[:, gi][None, :], tg)
+            # new_vec[c, s] = Tg[c, vec[c, s]]  via one-hot select over states.
+            new = jnp.zeros_like(vec)
+            for si in range(S):
+                new = jnp.where(vec == si, tg[:, si][:, None], new)
+            return new
+
+        init = jax.lax.broadcasted_iota(jnp.int32, (block_chunks, S), 1)
+        vec = jax.lax.fori_loop(0, chunk_bytes, body, init)
+        out_ref[...] = vec
+
+    return kernel
+
+
+def chunk_vectors(
+    chunks: jax.Array,
+    dfa: Dfa,
+    *,
+    block_chunks: int = DEFAULT_BLOCK_CHUNKS,
+    interpret: bool = True,
+) -> jax.Array:
+    """``(C, K) uint8`` → per-chunk state-transition vectors ``(C, S) int32``."""
+    c, k = chunks.shape
+    bc = min(block_chunks, c)
+    if c % bc:
+        raise ValueError(f"n_chunks {c} not a multiple of block_chunks {bc}")
+    kernel = _make_chunk_vectors_kernel(dfa, bc, k)
+    tt = jnp.asarray(dfa.transition.astype(np.int32))
+    return pl.pallas_call(
+        kernel,
+        grid=(c // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, k), lambda i: (i, 0)),
+            pl.BlockSpec((dfa.n_states, dfa.n_groups), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc, dfa.n_states), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, dfa.n_states), jnp.int32),
+        interpret=interpret,
+    )(chunks, tt)
+
+
+def _make_replay_kernel(dfa: Dfa, block_chunks: int, chunk_bytes: int):
+    S, G = dfa.n_states, dfa.n_groups
+    group_bytes = dfa.group_bytes
+    t_flat = tuple(int(x) for x in dfa.transition.reshape(-1))
+    e_flat = tuple(int(x) for x in dfa.emission.reshape(-1))
+
+    def kernel(chunks_ref, start_ref, cls_ref, end_ref):
+        data = chunks_ref[...].astype(jnp.int32)  # (BC, K)
+        state0 = start_ref[...].astype(jnp.int32).reshape(block_chunks)
+
+        def body(k, carry):
+            state = carry
+            byte = jax.lax.dynamic_slice(data, (0, k), (block_chunks, 1))[:, 0]
+            g = _group_select(byte, group_bytes, G)
+            idx = state * G + g  # (BC,) in [0, S*G)
+            new = jnp.zeros_like(state)
+            cls = jnp.zeros_like(state)
+            for j in range(S * G):
+                hit = idx == j
+                new = jnp.where(hit, t_flat[j], new)
+                cls = jnp.where(hit, e_flat[j], cls)
+            cls_ref[:, pl.dslice(k, 1)] = cls.astype(jnp.int32)[:, None]
+            return new
+
+        state = jax.lax.fori_loop(0, chunk_bytes, body, state0)
+        end_ref[...] = state[:, None]
+
+    return kernel
+
+
+def _make_replay_fused_kernel(dfa: Dfa, block_chunks: int, chunk_bytes: int):
+    """Replay that ALSO accumulates the paper-§3.2 per-chunk summaries
+    (record count, abs/rel column offset) inside the same VMEM pass —
+    the structural optimisation identified in EXPERIMENTS §Perf A: the
+    separate jnp ``chunk_summaries`` pass over the class stream disappears.
+    """
+    from repro.core.dfa import FIELD_DELIM, RECORD_DELIM
+
+    S, G = dfa.n_states, dfa.n_groups
+    group_bytes = dfa.group_bytes
+    t_flat = tuple(int(x) for x in dfa.transition.reshape(-1))
+    e_flat = tuple(int(x) for x in dfa.emission.reshape(-1))
+
+    def kernel(chunks_ref, start_ref, cls_ref, end_ref, summ_ref):
+        data = chunks_ref[...].astype(jnp.int32)
+        state0 = start_ref[...].astype(jnp.int32).reshape(block_chunks)
+        zeros = jnp.zeros((block_chunks,), jnp.int32)
+
+        def body(k, carry):
+            state, rec_cnt, fld_since = carry
+            byte = jax.lax.dynamic_slice(data, (0, k), (block_chunks, 1))[:, 0]
+            g = _group_select(byte, group_bytes, G)
+            idx = state * G + g
+            new = jnp.zeros_like(state)
+            cls = jnp.zeros_like(state)
+            for j in range(S * G):
+                hit = idx == j
+                new = jnp.where(hit, t_flat[j], new)
+                cls = jnp.where(hit, e_flat[j], cls)
+            cls_ref[:, pl.dslice(k, 1)] = cls[:, None]
+            is_rec = cls == RECORD_DELIM
+            is_fld = cls == FIELD_DELIM
+            rec_cnt = rec_cnt + is_rec.astype(jnp.int32)
+            # field delimiters since the last record delimiter (abs offset)
+            fld_since = jnp.where(is_rec, 0, fld_since + is_fld.astype(jnp.int32))
+            return new, rec_cnt, fld_since
+
+        state, rec_cnt, fld_since = jax.lax.fori_loop(
+            0, chunk_bytes, body, (state0, zeros, zeros)
+        )
+        end_ref[...] = state[:, None]
+        has_rec = rec_cnt > 0
+        # paper Fig. 4: ABS(=1) offset counts after the last record delim;
+        # REL(=0) chunks report their total field-delim count — identical
+        # here because fld_since never reset when has_rec is False.
+        summ_ref[:, 0:1] = rec_cnt[:, None]
+        summ_ref[:, 1:2] = has_rec.astype(jnp.int32)[:, None]
+        summ_ref[:, 2:3] = fld_since[:, None]
+
+    return kernel
+
+
+def replay_fused(
+    chunks: jax.Array,
+    start_states: jax.Array,
+    dfa: Dfa,
+    *,
+    block_chunks: int = DEFAULT_BLOCK_CHUNKS,
+    interpret: bool = True,
+):
+    """Fused replay: ``(C,K) bytes + (C,) starts → (classes (C,K) uint8,
+    end states (C,), summaries (C,3) int32 [rec_count, col_tag, col_off])``.
+    """
+    c, k = chunks.shape
+    bc = min(block_chunks, c)
+    if c % bc:
+        raise ValueError(f"n_chunks {c} not a multiple of block_chunks {bc}")
+    kernel = _make_replay_fused_kernel(dfa, bc, k)
+    classes, ends, summ = pl.pallas_call(
+        kernel,
+        grid=(c // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, k), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bc, k), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, k), jnp.int32),
+            jax.ShapeDtypeStruct((c, 1), jnp.int32),
+            jax.ShapeDtypeStruct((c, 3), jnp.int32),
+        ],
+        interpret=interpret,
+    )(chunks, start_states.astype(jnp.int32)[:, None])
+    return classes.astype(jnp.uint8), ends[:, 0], summ
+
+
+def replay(
+    chunks: jax.Array,
+    start_states: jax.Array,
+    dfa: Dfa,
+    *,
+    block_chunks: int = DEFAULT_BLOCK_CHUNKS,
+    interpret: bool = True,
+):
+    """Replay pass: ``(C, K) bytes + (C,) start states → (C, K) classes,
+    (C,) end states``."""
+    c, k = chunks.shape
+    bc = min(block_chunks, c)
+    if c % bc:
+        raise ValueError(f"n_chunks {c} not a multiple of block_chunks {bc}")
+    kernel = _make_replay_kernel(dfa, bc, k)
+    classes, ends = pl.pallas_call(
+        kernel,
+        grid=(c // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, k), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bc, k), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, k), jnp.int32),
+            jax.ShapeDtypeStruct((c, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(chunks, start_states.astype(jnp.int32)[:, None])
+    return classes.astype(jnp.uint8), ends[:, 0]

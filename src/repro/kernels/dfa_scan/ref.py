@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the dfa_scan kernels — thin wrappers over the
+reference implementations in repro.core.transition."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import transition as tr
+from repro.core.dfa import Dfa
+
+
+def chunk_vectors(chunks: jax.Array, dfa: Dfa) -> jax.Array:
+    groups = tr.byte_groups(chunks, dfa)
+    return tr.chunk_transition_vectors(groups, dfa)
+
+
+def replay(chunks: jax.Array, start_states: jax.Array, dfa: Dfa):
+    groups = tr.byte_groups(chunks, dfa)
+    classes, ends, _ = tr.replay(groups, start_states, dfa)
+    return classes, ends

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention: materialised-scores softmax."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0.0, 1.0, denom)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

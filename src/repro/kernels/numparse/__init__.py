@@ -1,0 +1,3 @@
+from repro.kernels.numparse.ops import parse_int_fields
+
+__all__ = ["parse_int_fields"]

@@ -1,0 +1,17 @@
+"""Jit'd wrappers for the numparse kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.numparse import numparse
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def parse_int_fields(field_bytes, lengths,
+                     block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                     interpret: bool = True):
+    return numparse.parse_int_fields(
+        field_bytes, lengths, block_rows=block_rows, interpret=interpret
+    )

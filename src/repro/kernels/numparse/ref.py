@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for numparse — delegates to repro.core.typeconv."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import typeconv
+
+
+def parse_int_fields(field_bytes, lengths):
+    """Same contract as the kernel: gathered (R, W) bytes + lengths."""
+    r, w = field_bytes.shape
+    # Reconstruct a css/offset view: fields are the rows themselves.
+    css = field_bytes.reshape(-1)
+    offsets = jnp.arange(r, dtype=jnp.int32) * w
+    parsed = typeconv.parse_int(css, offsets, lengths, width=w)
+    return parsed.value, parsed.valid

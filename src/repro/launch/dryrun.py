@@ -1,0 +1,407 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init), which is why this module sets XLA_FLAGS at the very
+top and why nothing else in the repo sets it globally.
+
+For each cell this proves, without touching real hardware:
+  * the sharding config is coherent (lower succeeds, no sharding conflicts),
+  * the collective schedule exists (parsed from the compiled HLO),
+  * per-device memory is known (``compiled.memory_analysis()``),
+  * FLOPs/bytes are known (``compiled.cost_analysis()``; see
+    repro/roofline for the scan-aware differential accounting).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs 4]
+
+Results accumulate in results/dryrun/<cell>.json (idempotent; --force to
+redo).
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from collections import Counter
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in the HLO text.
+
+    Ops inside ``while`` bodies appear once; the roofline layer multiplies
+    per-layer contributions via L=1/L=2 differencing (DESIGN.md §6).
+    """
+    totals = Counter()
+    counts = Counter()
+    # e.g.:  %ag = bf16[2,1024,128]{2,1,0} all-gather(%x), replica_groups=...
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        op = None
+        for c in _COLLECTIVES:
+            if f" {c}(" in line or f"{c}-start(" in line:
+                op = c
+                break
+        if op is None:
+            continue
+        m = shape_re.search(line.split("=", 1)[1] if "=" in line else line)
+        if not m:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        if dt == "tuple" or dt not in _DTYPE_BYTES:
+            # tuple shapes: sum every element shape on the line
+            nbytes = 0
+            for mm in shape_re.finditer(line):
+                if mm.group(1) in _DTYPE_BYTES:
+                    n = 1
+                    for d in mm.group(2).split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[mm.group(1)]
+                    break  # first shape = output
+        else:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes = n * _DTYPE_BYTES[dt]
+        totals[op] += nbytes
+        counts[op] += 1
+    return dict(totals), dict(counts)
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for kv in pairs or ():
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, n_layers=None,
+               overrides=None, tag="", microbatches=1):
+    """Lower + compile one cell; returns a JSON-able result dict."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch import shapes as shp
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import build_model
+    from repro.sharding.specs import multi_pod as sh_multi, single_pod as sh_single
+    from repro.train import optimizer as opt_mod
+    from repro.train import train_step as ts
+
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    if n_layers is not None:
+        import dataclasses
+        # Roofline differential probes: UNROLL the stack (scan_layers=False).
+        # XLA's cost analysis counts a while-loop body once regardless of
+        # trip count, so scanned L=1/L=2 probes would difference to ~zero;
+        # unrolled bodies are counted per layer (DESIGN.md §6).
+        overrides = {"n_layers": n_layers, "scan_layers": False}
+        if cfg.first_k_dense and n_layers <= cfg.first_k_dense:
+            overrides["first_k_dense"] = 0
+        if cfg.is_encoder_decoder:
+            overrides["n_enc_layers"] = n_layers
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh = sh_multi() if multi_pod else sh_single()
+    model = build_model(cfg, sh=sh)
+    dp = sh.dp
+
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    pspecs = to_sh(model.param_specs())
+    params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            structs, bspecs = shp.train_batch_specs(cfg, shape, dp)
+            opt_cfg = opt_mod.OptimizerConfig(
+                name="adafactor" if cfg.moe_fsdp else "adamw"
+            )
+            opt = opt_mod.make_optimizer(opt_cfg)
+            tc = ts.TrainConfig(optimizer=opt_cfg, microbatches=microbatches)
+            step_fn = ts.make_train_step(model, opt, tc, mesh)
+            state_specs = to_sh(ts.train_state_specs(model, opt_cfg))
+            state_struct = jax.eval_shape(
+                lambda p: ts.TrainState(p, opt.init(p), jax.numpy.zeros((), jax.numpy.int32)),
+                params_struct,
+            )
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_specs, to_sh(bspecs)),
+                out_shardings=(state_specs, None),
+                donate_argnums=(0,),
+            ).lower(state_struct, structs)
+        elif shape.kind == "prefill":
+            structs, bspecs = shp.train_batch_specs(cfg, shape, dp)
+            structs = {k: v for k, v in structs.items() if k != "labels"}
+            bspecs = {k: v for k, v in bspecs.items() if k != "labels"}
+
+            def prefill(params, batch):
+                logits, _ = model.forward(params, batch, mesh=mesh)
+                return logits
+
+            lowered = jax.jit(
+                prefill, in_shardings=(pspecs, to_sh(bspecs)),
+            ).lower(params_struct, structs)
+        else:  # decode
+            (token, state), (tspec, sspecs) = shp.decode_specs(model, shape, dp)
+
+            def serve_step(params, tok, st):
+                return model.decode_step(params, tok, st, mesh=mesh)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(pspecs, to_sh(tspec), to_sh(sspecs)),
+                out_shardings=(None, to_sh(sspecs)),
+                donate_argnums=(2,),
+            ).lower(params_struct, token, state)
+    lower_s = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t1
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    coll_bytes, coll_counts = parse_collective_bytes(compiled.as_text())
+    n_dev = 512 if multi_pod else 256
+    return {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_layers": cfg.n_layers,
+        "lower_s": round(lower_s, 2),
+        "compile_s": round(compile_s, 2),
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "devices": n_dev,
+    }
+
+
+def build_parser_cell(mib_per_device: int, multi_pod: bool,
+                      chunk_bytes: int = 64, use_matmul: bool = False,
+                      partition_impl: str = "scatter"):
+    """Lower + compile the distributed ParPaRaw parse itself on the
+    production mesh — the paper's technique as its own roofline cell."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ParserConfig, Schema, make_csv_dfa
+    from repro.core.distributed import DistributedParser
+    from repro.data import synth
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n_dev = 512 if multi_pod else 256
+    bytes_per_dev = mib_per_device << 20
+    n_chunks = bytes_per_dev // chunk_bytes * n_dev
+    max_records = max(1024, bytes_per_dev // 512)  # ~720 B/record yelp-like
+
+    cfg = ParserConfig(
+        dfa=make_csv_dfa(), schema=Schema.of(*synth.YELP_SCHEMA),
+        max_records=max_records, chunk_size=chunk_bytes,
+        use_matmul_scan=use_matmul, partition_impl=partition_impl,
+    )
+    t0 = time.time()
+    dp = DistributedParser(cfg, mesh, axis_names=axes)
+    lowered = dp.lower(n_chunks, chunk_bytes)
+    lower_s = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t1
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    coll_bytes, coll_counts = parse_collective_bytes(compiled.as_text())
+    return {
+        "status": "ok",
+        "arch": "parparaw-parser",
+        "shape": f"parse_{mib_per_device}mib"
+                 + (f"_c{chunk_bytes}" if chunk_bytes != 64 else "")
+                 + ("_mm" if use_matmul else "")
+                 + (f"_{partition_impl}" if partition_impl != "scatter" else ""),
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "input_bytes_per_device": bytes_per_dev,
+        "lower_s": round(lower_s, 2),
+        "compile_s": round(compile_s, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "devices": n_dev,
+    }
+
+
+def run_cell(arch, shape_name, mesh_kind, n_layers=None, overrides=None,
+             microbatches=1):
+    try:
+        return build_cell(arch, shape_name, mesh_kind == "multi", n_layers,
+                          overrides=overrides, microbatches=microbatches)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a result
+        return {
+            "status": "error",
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+
+
+def cell_path(arch, shape, mesh_kind, n_layers=None):
+    sfx = f"_L{n_layers}" if n_layers else ""
+    safe = arch.replace("/", "_").replace(".", "_")
+    return os.path.join(RESULTS_DIR, f"{safe}__{shape}__{mesh_kind}{sfx}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override layer count (roofline differential probes)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--parser-mib", type=int, default=None,
+                    help="build the distributed-parser cell (MiB/device)")
+    ap.add_argument("--parser-chunk", type=int, default=64)
+    ap.add_argument("--parser-matmul", action="store_true")
+    ap.add_argument("--parser-partition", default="scatter")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig overrides key=value (perf iterations)")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    if args.parser_mib is not None:
+        for mk in (["single", "multi"] if args.mesh == "both" else [args.mesh]):
+            out = build_parser_cell(
+                args.parser_mib, mk == "multi", chunk_bytes=args.parser_chunk,
+                use_matmul=args.parser_matmul,
+                partition_impl=args.parser_partition,
+            )
+            path = cell_path("parparaw-parser", out["shape"], mk)
+            with open(path, "w") as f:
+                json.dump(out, f, indent=1)
+            print(json.dumps(out, indent=1))
+        return
+
+    if not args.all:
+        assert args.arch and args.shape
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        for mk in meshes:
+            out = run_cell(args.arch, args.shape, mk, args.layers,
+                           overrides=_parse_overrides(args.set),
+                           microbatches=args.microbatches)
+            path = cell_path(args.arch + args.tag, args.shape, mk, args.layers)
+            with open(path, "w") as f:
+                json.dump(out, f, indent=1)
+            brief = {k: v for k, v in out.items() if k not in ("trace",)}
+            print(json.dumps(brief, indent=1))
+            if out["status"] == "ok":
+                print(f"[dryrun] {args.arch} × {args.shape} × {mk}: "
+                      f"compile {out['compile_s']}s, "
+                      f"temp {out['memory']['temp_bytes']/2**30:.2f} GiB/device")
+        return
+
+    # --all: fan out one subprocess per cell (isolated device state, parallel)
+    from repro.configs import ARCH_IDS, SHAPES
+    jobs = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mk in meshes:
+                variants = [None]
+                if mk == "single":
+                    variants += [1, 2]  # roofline differential probes
+                for nl in variants:
+                    path = cell_path(arch, shape, mk, nl)
+                    if os.path.exists(path) and not args.force:
+                        continue
+                    jobs.append((arch, shape, mk, nl))
+    print(f"[dryrun] {len(jobs)} cells to build")
+    running = []
+    while jobs or running:
+        while jobs and len(running) < args.jobs:
+            arch, shape, mk, nl = jobs.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mk]
+            if nl is not None:
+                cmd += ["--layers", str(nl)]
+            env = dict(os.environ)
+            running.append(((arch, shape, mk, nl), subprocess.Popen(
+                cmd, env=env, stdout=subprocess.DEVNULL, stderr=subprocess.PIPE)))
+        done = [r for r in running if r[1].poll() is not None]
+        for (key, proc) in done:
+            running.remove((key, proc))
+            status = "ok" if proc.returncode == 0 else f"rc={proc.returncode}"
+            print(f"[dryrun] finished {key}: {status}", flush=True)
+        time.sleep(1.0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + PartitionSpecs for every
+(arch × shape) dry-run cell.  No device allocation anywhere.
+
+Sharding layout decisions (DESIGN.md §4):
+  * train/prefill: batch over the data axes, activations TP via constraints;
+  * decode_32k:    batch over data axes, KV-cache sequence over "model"
+    (flash-decoding-style sequence sharding — KV head counts (2–8) don't
+    divide the 16-way TP axis, sequence always does);
+  * long_500k:     global_batch=1 → KV/conv caches shard sequence over
+    ("data","model") (524288/256 = 2048 per chip); SSM state over heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.model import Model
+from repro.models.ssm import SSMCache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, dp) -> Tuple[Dict, Dict]:
+    b, s = shape.global_batch, shape.seq_len
+    structs = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.n_patches:
+        structs["patches"] = sds((b, cfg.n_patches, cfg.d_model), jnp.float32)
+        specs["patches"] = P(dp, None, None)
+    if cfg.is_encoder_decoder:
+        structs["frames"] = sds((b, cfg.enc_frames, cfg.d_model), jnp.float32)
+        specs["frames"] = P(dp, None, None)
+    return structs, specs
+
+
+def decode_specs(model: Model, shape: ShapeConfig, dp) -> Tuple[Tuple, Tuple]:
+    """(structs, specs) for (token, DecodeState)."""
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    state = jax.eval_shape(lambda: T.init_decode_state(cfg, b, s))
+    if shape.name == "long_500k":
+        seq_axis = ("data", "model") if b == 1 else "model"
+        batch_axis = None if b == 1 else dp
+    else:
+        seq_axis = "model"
+        batch_axis = dp
+    kv_spec = P(None, batch_axis, seq_axis, None, None)
+    specs = T.DecodeState(
+        kv={"k": kv_spec, "v": kv_spec} if state.kv is not None else None,
+        ssm=(
+            SSMCache(
+                P(None, batch_axis, None, "model"),
+                P(None, batch_axis, "model", None, None),
+            )
+            if state.ssm is not None else None
+        ),
+        cross_kv=(
+            {"k": P(None, batch_axis, None, None, None),
+             "v": P(None, batch_axis, None, None, None)}
+            if state.cross_kv is not None else None
+        ),
+        length=P(batch_axis),
+    )
+    token = sds((b,), jnp.int32)
+    token_spec = P(batch_axis)
+    return (token, state), (token_spec, specs)

@@ -1,0 +1,106 @@
+"""Production training launcher: --arch <id> on the active mesh.
+
+On a real pod this is the multi-host entry (jax.distributed.initialize is
+invoked when coordinator env vars are present); on a dev box it runs the
+same code path on whatever devices exist.
+
+    python -m repro.launch.train --arch qwen2-1.5b --reduced --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_launch")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adafactor"])
+    ap.add_argument("--mesh", default="auto",
+                    help="auto | dxm grid like 4x2 (data x model)")
+    args = ap.parse_args()
+
+    if "COORDINATOR_ADDRESS" in os.environ:  # multi-host pod entry
+        import jax
+        jax.distributed.initialize()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.models.model import build_model
+    from repro.sharding.specs import Sharding
+    from repro.train import optimizer as opt_mod
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.loop import run_training
+    from repro.train.train_step import (
+        TrainConfig, init_train_state, jit_train_step, train_state_specs,
+    )
+
+    n_dev = len(jax.devices())
+    if args.mesh == "auto":
+        dm = (n_dev, 1)
+    else:
+        dm = tuple(int(x) for x in args.mesh.split("x"))
+    mesh = jax.make_mesh(dm, ("data", "model"))
+    sh = Sharding(dp=("data",), tp="model", enabled=True)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg, sh=sh)
+    print(f"[train] arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
+          f"mesh={dm} devices={n_dev}")
+
+    ocfg = opt_mod.OptimizerConfig(name=args.optimizer, total_steps=args.steps)
+    opt = opt_mod.make_optimizer(ocfg)
+    tc = TrainConfig(optimizer=ocfg, microbatches=args.microbatches)
+    batch_specs = {"tokens": P(("data",), None), "labels": P(("data",), None)}
+    if cfg.n_patches:
+        batch_specs["patches"] = P(("data",), None, None)
+    if cfg.is_encoder_decoder:
+        batch_specs["frames"] = P(("data",), None, None)
+
+    with mesh:
+        step_fn = jit_train_step(model, opt, tc, mesh, batch_specs)
+        state = init_train_state(model, jax.random.PRNGKey(0), opt)
+        # place state according to the specs
+        to_sh = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        specs = to_sh(train_state_specs(model, ocfg))
+        state = jax.tree.map(jax.device_put, state, specs)
+
+        rng = np.random.default_rng(0)
+
+        def data_factory(start):
+            def gen():
+                while True:
+                    toks = rng.integers(0, cfg.vocab, (args.batch, args.seq_len + 1))
+                    batch = {
+                        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+                    }
+                    if cfg.n_patches:
+                        batch["patches"] = jnp.zeros(
+                            (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+                    if cfg.is_encoder_decoder:
+                        batch["frames"] = jnp.zeros(
+                            (args.batch, cfg.enc_frames, cfg.d_model), jnp.float32)
+                    yield batch
+            return gen()
+
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+        run_training(step_fn, state, data_factory, total_steps=args.steps,
+                     ckpt=ckpt, ckpt_every=args.ckpt_every)
+
+
+if __name__ == "__main__":
+    main()

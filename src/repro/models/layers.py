@@ -1,0 +1,158 @@
+"""Shared model layers: norms, rotary embeddings, linears, SwiGLU MLP.
+
+Functional style: ``init_*`` returns a param pytree (+ a parallel
+PartitionSpec pytree from the ``*_specs`` helpers); apply functions are pure.
+All matmuls run in the param dtype (bf16 for production configs) with fp32
+norms/softmax where it matters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def truncnorm(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_specs():
+    return {"scale": P(None)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_specs():
+    return {"scale": P(None), "bias": P(None)}
+
+
+def layernorm(params, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": truncnorm(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_specs(in_spec, out_spec, bias=False):
+    p = {"w": P(in_spec, out_spec)}
+    if bias:
+        p["b"] = P(out_spec)
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """``x (..., S, H, hd)``, ``positions (..., S)`` broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype, variant="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": init_linear(k2, d_model, d_ff, dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype),
+    }
+    if variant == "swiglu":
+        p["gate"] = init_linear(k1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_specs(tp="model", variant="swiglu"):
+    p = {
+        "up": linear_specs(None, tp),
+        "down": linear_specs(tp, None),
+    }
+    if variant == "swiglu":
+        p["gate"] = linear_specs(None, tp)
+    return p
+
+
+def mlp(params, x, sh=None):
+    if "gate" in params:  # SwiGLU
+        h = jax.nn.silu(linear(params["gate"], x)) * linear(params["up"], x)
+    else:  # plain GELU MLP (starcoder2-style)
+        h = jax.nn.gelu(linear(params["up"], x))
+    if sh is not None:
+        h = sh.bsf(h)
+    return linear(params["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": truncnorm(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embedding_specs(tp="model"):
+    return {"table": P(tp, None)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    """Logits against the (possibly separate) output table, fp32 accumulate."""
+    return jnp.einsum(
+        "bsd,vd->bsv", x, params["table"], preferred_element_type=jnp.float32
+    )

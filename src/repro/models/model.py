@@ -1,0 +1,76 @@
+"""Public model API: build(config) → bound init/forward/loss/decode functions.
+
+The same entry points serve smoke tests (1 CPU device, sharding disabled),
+the end-to-end training examples, and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding.specs import NO_SHARDING, Sharding
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    sh: Sharding
+
+    # ---- params -----------------------------------------------------------
+    def init(self, key):
+        return T.init_model(key, self.cfg)
+
+    def param_specs(self):
+        return T.model_specs(self.cfg, tp=self.sh.tp)
+
+    # ---- training / prefill -------------------------------------------------
+    def forward(self, params, batch: Dict[str, Any], mesh=None, impl=None):
+        return T.forward(
+            params, batch["tokens"], self.cfg, self.sh, mesh,
+            patches=batch.get("patches"), frames=batch.get("frames"), impl=impl,
+        )
+
+    def loss(self, params, batch, mesh=None, impl=None):
+        labels = batch["labels"]
+        if self.cfg.logit_chunk:
+            # chunked CE: (B,S,V) fp32 logits never materialise
+            x, aux = T.forward_hidden(
+                params, batch["tokens"], self.cfg, self.sh, mesh,
+                patches=batch.get("patches"), frames=batch.get("frames"),
+                impl=impl,
+            )
+            if self.cfg.n_patches and "patches" in batch:
+                x = x[:, self.cfg.n_patches:]
+            nll = T.chunked_ce_loss(params, x, labels, self.cfg, self.sh)
+            return nll + self.cfg.moe_aux_weight * aux, (nll, aux)
+        logits, aux = self.forward(params, batch, mesh=mesh, impl=impl)
+        if self.cfg.n_patches and "patches" in batch:
+            logits = logits[:, self.cfg.n_patches:]
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        take = jnp.take_along_axis(lp, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = -(take * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return nll + self.cfg.moe_aux_weight * aux, (nll, aux)
+
+    # ---- decode -------------------------------------------------------------
+    def init_decode_state(self, batch, max_seq, dtype=None):
+        return T.init_decode_state(self.cfg, batch, max_seq, dtype)
+
+    def decode_state_specs(self, seq_axis=None):
+        return T.decode_state_specs(self.cfg, self.sh, seq_axis)
+
+    def decode_step(self, params, token, state, mesh=None, active=None):
+        return T.decode_step(params, token, state, self.cfg, self.sh, mesh,
+                             active=active)
+
+
+def build_model(cfg: ModelConfig, sharded: bool = False,
+                sh: Optional[Sharding] = None) -> Model:
+    if sh is None:
+        sh = Sharding() if sharded else NO_SHARDING
+    return Model(cfg, sh)

@@ -1,0 +1,240 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+The chunked SSD algorithm is matmul-dominated by construction (its selling
+point: the quadratic intra-chunk term and the state passing are all einsums
+→ MXU-friendly), with one tiny inter-chunk associative scan.  Decode is the
+dual recurrent form: O(1) state update per token — which is why the 500k
+long-context decode shape is assigned to the SSM/hybrid archs only.
+
+Layer: in_proj → [z | xBC | dt]; causal depthwise conv on xBC; SSD core;
+gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def _ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    d_inner, h, conv_dim = _ssm_dims(cfg)
+    n, g = cfg.ssm_state, cfg.ssm_ngroups
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * g * n + h
+    dt = jnp.exp(
+        jax.random.uniform(k3, (h,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "in_proj": L.init_linear(k1, d, d_in_proj, cfg.param_dtype),
+        "conv_w": L.truncnorm(k2, (cfg.ssm_conv, conv_dim), 1.0 / math.sqrt(cfg.ssm_conv), cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": L.init_rmsnorm(d_inner, cfg.param_dtype),
+        "out_proj": L.init_linear(k4, d_inner, d, cfg.param_dtype),
+    }
+
+
+def ssm_specs(cfg, tp="model"):
+    return {
+        "in_proj": L.linear_specs(None, tp),
+        "conv_w": P(None, tp),
+        "conv_b": P(tp),
+        "A_log": P(tp),
+        "dt_bias": P(tp),
+        "D": P(tp),
+        "norm": L.rmsnorm_specs(),
+        "out_proj": L.linear_specs(tp, None),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg):
+    d_inner, h, _ = _ssm_dims(cfg)
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over (B, S, C): kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _segsum(x):
+    """(..., Q) → (..., Q, Q) cumulative segment sums: out[i,j] = Σ_{j<k≤i}."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int):
+    """SSD core (train/prefill).
+
+    x: (B, S, H, P) — per-head inputs; dt: (B, S, H) fp32 (post-softplus);
+    a: (H,) fp32 negative; b_mat/c_mat: (B, S, G, N) fp32 with G | H —
+    groups are kept as an einsum axis instead of being materialised per
+    head (the 16×-broadcast was hymba's dominant HBM term; EXPERIMENTS.md
+    §Perf hymba iteration 3).  G == H degenerates to per-head.
+    Returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    g = b_mat.shape[2]
+    hg = h // g
+    q = min(chunk, s)
+    assert s % q == 0 and h % g == 0
+    c = s // q
+
+    # heads grouped contiguously: head = g_idx · hg + j
+    xr = (x.astype(jnp.float32) * dt[..., None]).reshape(bsz, c, q, g, hg, p)
+    da = (dt * a[None, None, :]).reshape(bsz, c, q, g, hg)
+    br = b_mat.reshape(bsz, c, q, g, n).astype(jnp.float32)
+    cr = c_mat.reshape(bsz, c, q, g, n).astype(jnp.float32)
+
+    da_h = jnp.moveaxis(da, 2, -1)                               # (B,C,G,Hg,Q)
+    lmat = jnp.exp(_segsum(da_h))                                # (B,C,G,Hg,Q,Q)
+    y_diag = jnp.einsum("bcqgn,bcsgn,bcghqs,bcsghp->bcqghp", cr, br, lmat, xr)
+
+    da_cum = jnp.cumsum(da_h, axis=-1)                           # (B,C,G,Hg,Q)
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)
+    states = jnp.einsum("bcsgn,bcghs,bcsghp->bcghpn", br, decay_states, xr)
+
+    # inter-chunk recurrence: S_c = S_{c-1}·exp(Σda_c) + states_c (exclusive)
+    chunk_decay = jnp.exp(da_cum[..., -1])                       # (B,C,G,Hg)
+
+    def op(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return (a1 * a2, s1 * a2[..., None, None] + s2)
+
+    dec_inc, st_inc = jax.lax.associative_scan(
+        op, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)), axis=0
+    )
+    st_inc = jnp.moveaxis(st_inc, 0, 1)                          # (B,C,G,Hg,P,N)
+    final_state = st_inc[:, -1]
+    prev = jnp.concatenate(
+        [jnp.zeros_like(st_inc[:, :1]), st_inc[:, :-1]], axis=1
+    )                                                            # exclusive
+
+    state_decay_out = jnp.exp(da_cum)                            # (B,C,G,Hg,Q)
+    y_off = jnp.einsum("bcqgn,bcghpn,bcghq->bcqghp", cr, prev, state_decay_out)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state.reshape(bsz, h, p, n)
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, K-1, conv_dim)
+    state: jax.Array  # (B, H, P, N) fp32
+
+
+def init_ssm_cache(batch, cfg, dtype):
+    d_inner, h, conv_dim = _ssm_dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, h, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    )
+
+
+def ssm_cache_specs(sh):
+    return SSMCache(conv=P(sh.dp, None, sh.tp), state=P(sh.dp, sh.tp, None, None))
+
+
+
+
+def ssm_forward(params, x, cfg, sh):
+    """Full-sequence SSM layer (train/prefill).  x (B, S, D)."""
+    bsz, s, d = x.shape
+    d_inner, h, conv_dim = _ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = L.linear(params["in_proj"], x)
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    xh = xs.reshape(bsz, s, h, cfg.ssm_headdim)
+    # groups stay an einsum axis inside ssd_chunked — no H/G-fold broadcast
+    bh = b_mat.astype(jnp.float32).reshape(bsz, s, g, n)
+    ch = c_mat.astype(jnp.float32).reshape(bsz, s, g, n)
+
+    y, _ = ssd_chunked(xh, dt, a, bh, ch, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return L.linear(params["out_proj"], y)
+
+
+def ssm_decode(params, x, cache: SSMCache, cfg, sh):
+    """One-token recurrent step.  x (B, 1, D) → (out, new_cache)."""
+    bsz = x.shape[0]
+    d_inner, h, conv_dim = _ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    p = cfg.ssm_headdim
+
+    zxbcdt = L.linear(params["in_proj"], x)[:, 0]
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B, K, C)
+    w = params["conv_w"]
+    xbc_c = jnp.einsum("bkc,kc->bc", conv_in, w) + params["conv_b"]
+    xbc_c = jax.nn.silu(xbc_c)
+    new_conv = conv_in[:, 1:]
+
+    xs, b_mat, c_mat = jnp.split(xbc_c, [d_inner, d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a[None, :])                                  # (B, H)
+
+    xh = xs.reshape(bsz, h, p).astype(jnp.float32)
+    bh = jnp.repeat(b_mat.reshape(bsz, g, n), h // g, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(c_mat.reshape(bsz, g, n), h // g, axis=1).astype(jnp.float32)
+
+    new_state = (
+        cache.state * decay[..., None, None]
+        + jnp.einsum("bhp,bhn->bhpn", xh * dt[..., None], bh)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch) + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.linear(params["out_proj"], y)[:, None, :]
+    return out, SSMCache(new_conv, new_state)
+
+
+def ssd_reference(x, dt, a, b_mat, c_mat):
+    """Naive O(S²)-free sequential recurrence oracle for tests."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * a[None, :])
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x[:, t].astype(jnp.float32) * dt[:, t][..., None], b_mat[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, c_mat[:, t]))
+    return jnp.stack(ys, axis=1), state

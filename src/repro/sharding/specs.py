@@ -1,0 +1,68 @@
+"""Logical-axis → mesh-axis sharding rules (GSPMD side of the framework).
+
+Mesh axes (launch/mesh.py):
+    single pod: ("data", "model")            = (16, 16)
+    multi-pod:  ("pod", "data", "model")     = (2, 16, 16)
+
+Logical rules (MaxText-style):  batch → (pod, data);  heads / d_ff / vocab /
+experts → model;  long-context KV sequence → data (sequence parallelism for
+the 500k decode shapes).  ``Sharding`` is threaded through model code and
+no-ops gracefully outside a mesh so smoke tests run on one CPU device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Sharding:
+    """Axis names for the active mesh (None disables constraints)."""
+
+    dp: Tuple[str, ...] = ("data",)   # batch / fsdp axes ("pod" folded in)
+    tp: str = "model"                 # tensor-parallel axis
+    sp: Optional[str] = None          # sequence-parallel axis (long decode)
+    enabled: bool = True
+
+    # ---- activation constraint helpers ------------------------------------
+    def act(self, x, *spec):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    def batch(self):
+        return self.dp
+
+    # common activation layouts
+    def bsd(self, x):   # (batch, seq, d_model)
+        return self.act(x, self.dp, None, None)
+
+    def bshd(self, x):  # (batch, seq, heads, head_dim) — heads on tp
+        return self.act(x, self.dp, None, self.tp, None)
+
+    def bsf(self, x):   # (batch, seq, d_ff) — ff on tp
+        return self.act(x, self.dp, None, self.tp)
+
+    def bsv(self, x):   # (batch, seq, vocab) — vocab on tp
+        return self.act(x, self.dp, None, self.tp)
+
+
+NO_SHARDING = Sharding(enabled=False, dp=(), tp=None, sp=None)
+
+
+def single_pod() -> Sharding:
+    return Sharding(dp=("data",), tp="model")
+
+
+def multi_pod() -> Sharding:
+    return Sharding(dp=("pod", "data"), tp="model")
+
+
+def for_mesh(mesh) -> Sharding:
+    names = mesh.axis_names
+    if "pod" in names:
+        return multi_pod()
+    return single_pod()

@@ -1,0 +1,67 @@
+"""Int8-quantised gradient all-reduce with error feedback (optional).
+
+A distributed-optimisation trick for bandwidth-bound DP meshes: gradients
+are per-tensor scaled to int8, summed across the data axes in int32, and
+dequantised.  The quantisation residual is fed back into the next step's
+gradient (error feedback), which keeps convergence within noise for
+momentum-based optimizers (1-bit Adam / PowerSGD literature).
+
+Implemented as a shard_map over the DP axes so the collective is explicit
+(and visible to the roofline's collective-bytes parser).  Off by default;
+enabled via ``TrainConfig.compress_grads``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _quantize(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_grads(grads, sh, mesh):
+    """Quantise → psum(int32) → dequantise, per gradient leaf, over dp axes.
+
+    NOTE: with standard GSPMD data parallelism gradients are already summed
+    by the autodiff transpose; this path is for explicitly DP-replicated
+    setups (examples/train_lm.py --compress-grads) and for demonstrating the
+    collective-compression machinery at dry-run scale.
+    """
+    axes = sh.dp
+
+    def one(g):
+        def body(gl):
+            q, scale = _quantize(gl)
+            qsum = jax.lax.psum(q.astype(jnp.int32), axes)
+            ssum = jax.lax.pmax(scale, axes)  # conservative shared scale
+            return qsum.astype(jnp.float32) * ssum
+
+        spec = P()  # replicated view per dp rank
+        return shard_map(
+            body, mesh=mesh, in_specs=(spec,), out_specs=spec, check_rep=False
+        )(g)
+
+    return jax.tree.map(one, grads)
+
+
+class ErrorFeedback:
+    """Host-side wrapper carrying the error-feedback residual tree."""
+
+    def __init__(self):
+        self.residual = None
+
+    def apply(self, grads):
+        if self.residual is not None:
+            grads = jax.tree.map(lambda g, r: g + r, grads, self.residual)
+        quantised = jax.tree.map(lambda g: _dequant(*_quantize(g)), grads)
+        self.residual = jax.tree.map(lambda g, q: g - q, grads, quantised)
+        return quantised
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,118 @@
+"""Sharded training step: loss → grads → optimizer update, with optional
+microbatch gradient accumulation and int8-compressed DP gradient reduction.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+in/out shardings from ``train_state_specs``; the same function lowers for
+the 1-device smoke tests and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import Optimizer, OptimizerConfig
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    microbatches: int = 1            # gradient accumulation steps
+    compress_grads: bool = False     # int8 DP all-reduce (train/grad_compress)
+
+
+def init_train_state(model: Model, key, opt: Optimizer) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(model: Model, opt_cfg: OptimizerConfig) -> TrainState:
+    pspecs = model.param_specs()
+    return TrainState(
+        params=pspecs,
+        opt=opt_mod.opt_state_specs(opt_cfg, pspecs),
+        step=P(),
+    )
+
+
+def make_train_step(model: Model, opt: Optimizer, tc: TrainConfig, mesh=None):
+    def loss_fn(params, batch):
+        total, (nll, aux) = model.loss(params, batch, mesh=mesh)
+        return total, (nll, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single_grads(params, batch):
+        (loss, (nll, aux)), grads = grad_fn(params, batch)
+        return loss, nll, aux, grads
+
+    def accumulated_grads(params, batch):
+        """lax.scan over microbatches: memory-bounded gradient accumulation."""
+        n = tc.microbatches
+
+        def reshape(x):
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, l_acc, n_acc, a_acc = carry
+            (loss, (nll, aux)), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, l_acc + loss, n_acc + nll, a_acc + aux), None
+
+        (gsum, loss, nll, aux), _ = jax.lax.scan(
+            body, (zeros, 0.0, 0.0, 0.0), micro
+        )
+        inv = 1.0 / n
+        return loss * inv, nll * inv, aux * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def step_fn(state: TrainState, batch: Dict[str, jax.Array]):
+        if tc.microbatches > 1:
+            loss, nll, aux, grads = accumulated_grads(state.params, batch)
+        else:
+            loss, nll, aux, grads = single_grads(state.params, batch)
+        if tc.compress_grads and mesh is not None:
+            from repro.train.grad_compress import compressed_psum_grads
+            grads = compressed_psum_grads(grads, model.sh, mesh)
+        new_params, new_opt = opt.update(grads, state.opt, state.params, state.step)
+        metrics = {
+            "loss": loss,
+            "nll": nll,
+            "aux": aux,
+            "grad_norm": opt_mod.global_norm(grads),
+            "lr": opt_mod.lr_schedule(tc.optimizer, state.step),
+        }
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return step_fn
+
+
+def jit_train_step(model: Model, opt: Optimizer, tc: TrainConfig, mesh,
+                   batch_specs: Dict[str, P]):
+    """jit with explicit in/out shardings for the production mesh."""
+    step_fn = make_train_step(model, opt, tc, mesh)
+    state_specs = train_state_specs(model, tc.optimizer)
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return jax.jit(
+        step_fn,
+        in_shardings=(to_sh(state_specs), to_sh(batch_specs)),
+        out_shardings=(to_sh(state_specs), None),
+        donate_argnums=(0,),
+    )

@@ -1,0 +1,55 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device; only launch/dryrun.py
+fakes 512 devices (in its own process)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_csv_table(rng, n_rows, dtypes, quote_prob=0.5, newline_prob=0.2,
+                     empty_prob=0.1):
+    """Generate a random table + its RFC4180 CSV encoding via Python's csv
+    module (the gold-standard oracle)."""
+    import csv as pycsv
+    import io
+
+    rows = []
+    for _ in range(n_rows):
+        row = []
+        for dt in dtypes:
+            if rng.random() < empty_prob:
+                row.append("")
+            elif dt == "int32":
+                row.append(str(int(rng.integers(-(10**8), 10**8))))
+            elif dt == "float32":
+                v = float(rng.normal()) * 10 ** int(rng.integers(-3, 6))
+                row.append(f"{v:.6g}")
+            elif dt == "date":
+                y, m, d = int(rng.integers(1970, 2037)), int(rng.integers(1, 13)), int(rng.integers(1, 29))
+                if rng.random() < 0.5:
+                    row.append(f"{y:04d}-{m:02d}-{d:02d}")
+                else:
+                    hh, mm, ss = (int(rng.integers(0, x)) for x in (24, 60, 60))
+                    row.append(f"{y:04d}-{m:02d}-{d:02d} {hh:02d}:{mm:02d}:{ss:02d}")
+            else:
+                n = int(rng.integers(0, 30))
+                alphabet = list("abcXYZ 09_-+.;")
+                if rng.random() < quote_prob:
+                    alphabet += ['"', ","]
+                if rng.random() < newline_prob:
+                    alphabet += ["\n"]
+                row.append("".join(rng.choice(alphabet) for _ in range(n)))
+        rows.append(row)
+    buf = io.StringIO()
+    w = pycsv.writer(buf, quoting=pycsv.QUOTE_MINIMAL, lineterminator="\n")
+    w.writerows(rows)
+    return rows, buf.getvalue().encode()

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests on REDUCED configs: one forward + one grad
+step (shape + finiteness), and decode-vs-forward parity where applicable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import build_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.n_patches:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_frames, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad_step(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    exp_s = S + (cfg.n_patches or 0)
+    assert logits.shape == (B, exp_s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+    def loss(p):
+        return model.loss(p, batch)[0]
+
+    l0, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert bool(jnp.isfinite(l0)), arch
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat), arch
+    # one SGD step must change the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.3 * g.astype(p.dtype), params, grads)
+    l1 = jax.jit(loss)(params2)
+    assert float(l1) != float(l0)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS])
+def test_decode_matches_forward(arch, rng):
+    """Teacher-forced decode must reproduce the full-sequence forward logits
+    (the KV-cache / recurrent-state correctness oracle).  fp32 params so the
+    comparison is sharp — bf16 rounding differences between the chunked-SSD
+    and recurrent paths are ~1e-2 and would mask real cache bugs."""
+    import dataclasses
+    # fp32 + no-drop capacity: the forward pass must not drop MoE tokens or
+    # decode (dropless gather path) can't match it.
+    cfg = dataclasses.replace(get_config(arch, reduced=True),
+                              param_dtype=jnp.float32, capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = _batch(cfg, rng)
+    n_dec = 8
+    batch["tokens"] = batch["tokens"][:, :n_dec]
+
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+    pfx = cfg.n_patches or 0
+    if pfx:
+        logits_full = logits_full[:, pfx:]
+
+    state = model.init_decode_state(B, max_seq=n_dec + pfx)
+    if cfg.is_encoder_decoder:
+        # prime the cross-attention cache from the encoder output
+        from repro.models import transformer as T
+        from repro.models import layers as L
+        enc = T.encode(params, batch["frames"], cfg, model.sh, None)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            prm = jax.tree.map(lambda a: a[i], params["blocks"])
+            b_, t_, _ = enc.shape
+            ks.append(L.linear(prm["cross"]["wk"], enc).reshape(b_, t_, cfg.n_kv_heads, cfg.head_dim))
+            vs.append(L.linear(prm["cross"]["wv"], enc).reshape(b_, t_, cfg.n_kv_heads, cfg.head_dim))
+        state = state._replace(cross_kv={"k": jnp.stack(ks), "v": jnp.stack(vs)})
+    if pfx:
+        # feed patch positions through decode as embeddings is not supported;
+        # decode parity for VLM checked on the token suffix only after a
+        # text-only prefix (patches skipped in this smoke test)
+        batch.pop("patches")
+        logits_full, _ = jax.jit(model.forward)(params, {**batch})
+        state = model.init_decode_state(B, max_seq=n_dec)
+
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(n_dec):
+        logits_t, state = step(params, batch["tokens"][:, t], state)
+        outs.append(logits_t)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(logits_full, np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+def test_param_count_sanity():
+    """Analytic param counts agree with actual init on reduced configs."""
+    for arch in ("llama3.2-3b", "qwen2-1.5b", "mamba2-370m"):
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        approx = cfg.param_count()
+        assert abs(actual - approx) / actual < 0.15, (arch, actual, approx)
+
+
+def test_full_config_param_counts():
+    """Full (non-reduced) configs land near their advertised sizes."""
+    expected = {
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "deepseek-7b": (6e9, 8e9),
+        "starcoder2-15b": (13e9, 18e9),
+        "qwen2-1.5b": (1.2e9, 2.2e9),
+        "mamba2-370m": (3e8, 4.6e8),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "phi3.5-moe-42b-a6.6b": (3.7e10, 4.7e10),
+        "internvl2-76b": (6e10, 8.5e10),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, f"{n:.3e}")
+
+
+def test_moe_active_params():
+    kimi = get_config("kimi-k2-1t-a32b")
+    active = kimi.active_param_count()
+    assert 2.5e10 <= active <= 4.0e10, f"{active:.3e}"  # ~32B active

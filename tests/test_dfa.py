@@ -1,0 +1,102 @@
+"""DFA table invariants + parallel-vs-sequential equivalence (paper §3.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dfa as dfa_mod
+from repro.core.transition import sequential_reference, transition_pipeline
+
+ALL_DFAS = {
+    "csv": dfa_mod.make_csv_dfa(),
+    "csv+comment": dfa_mod.make_csv_dfa(comment=b"#"),
+    "tsv": dfa_mod.make_csv_dfa(delimiter=b"\t"),
+    "simple": dfa_mod.make_simple_dfa(),
+    "clf": dfa_mod.make_log_dfa(),
+}
+
+
+@pytest.mark.parametrize("name", list(ALL_DFAS))
+def test_table_invariants(name):
+    d = ALL_DFAS[name]
+    d.validate_tables()
+    # every state reachable row maps into range
+    assert d.transition.max() < d.n_states
+    assert d.emission.max() <= dfa_mod.CONTROL
+    # group LUT covers all 256 bytes
+    assert d.group_of.shape == (256,)
+    # distinguished bytes map to their own groups
+    for g, b in enumerate(d.group_bytes):
+        assert d.group_of[b] == g
+
+
+def _pad(raw: bytes, k: int, rd: int) -> np.ndarray:
+    arr = np.frombuffer(raw, np.uint8)
+    n = arr.size + (0 if arr.size and arr[-1] == rd else 1)
+    total = ((n + k - 1) // k) * k
+    buf = np.full(total, dfa_mod.PAD_BYTE, np.uint8)
+    buf[: arr.size] = arr
+    if n != arr.size:
+        buf[arr.size] = rd
+    return buf.reshape(-1, k)
+
+
+@pytest.mark.parametrize("name", list(ALL_DFAS))
+@pytest.mark.parametrize("chunk", [3, 16, 64])
+def test_parallel_matches_sequential(name, chunk):
+    d = ALL_DFAS[name]
+    raw = (
+        b'aa,"b,\nb",cc\n# not, a, comment?\n"x""y",,"z"\n'
+        b"1,2,3\n[10/Oct/2000] \"GET /x\" 200\n"
+    )
+    chunks = _pad(raw, chunk, d.group_bytes[0])
+    cls_ref, _, end_ref = sequential_reference(chunks.reshape(-1), d)
+    classes, ends, _ = transition_pipeline(jnp.asarray(chunks), d)
+    np.testing.assert_array_equal(np.asarray(classes).reshape(-1), cls_ref)
+    assert int(ends[-1]) == end_ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.binary(min_size=0, max_size=600),
+    chunk=st.sampled_from([5, 32, 64]),
+    name=st.sampled_from(list(ALL_DFAS)),
+)
+def test_property_parallel_matches_sequential(data, chunk, name):
+    """The parallel FSM simulation must equal the sequential one for ANY
+    byte string — including pathological quote/delimiter soup."""
+    d = ALL_DFAS[name]
+    # bias the alphabet towards structural characters
+    trans = bytes((b % 16) + ord("0") if b > 127 else b for b in data)
+    structural = b',"\n#x '
+    biased = bytes(
+        structural[b % len(structural)] if b % 3 == 0 else b for b in trans
+    )
+    chunks = _pad(biased, chunk, d.group_bytes[0])
+    cls_ref, _, end_ref = sequential_reference(chunks.reshape(-1), d)
+    classes, ends, _ = transition_pipeline(jnp.asarray(chunks), d)
+    np.testing.assert_array_equal(np.asarray(classes).reshape(-1), cls_ref)
+    assert int(ends[-1]) == end_ref
+
+
+def test_comment_lines_produce_no_records():
+    d = ALL_DFAS["csv+comment"]
+    raw = b"# header comment\n1,2\n# interior\n3,4\n"
+    chunks = _pad(raw, 16, d.group_bytes[0])
+    classes, _, _ = transition_pipeline(jnp.asarray(chunks), d)
+    n_rec = int((np.asarray(classes).reshape(-1) == dfa_mod.RECORD_DELIM).sum())
+    assert n_rec == 2  # only the two data lines delimit records
+
+
+def test_quoted_delimiters_are_data():
+    d = ALL_DFAS["csv"]
+    raw = b'"a,b\nc",2\n'
+    chunks = _pad(raw, 8, d.group_bytes[0])
+    classes, _, _ = transition_pipeline(jnp.asarray(chunks), d)
+    flat = np.asarray(classes).reshape(-1)
+    # the comma and newline inside quotes are DATA
+    assert flat[2] == dfa_mod.DATA  # ','
+    assert flat[4] == dfa_mod.DATA  # '\n'
+    # the structural comma after the closing quote is a FIELD_DELIM
+    assert flat[7] == dfa_mod.FIELD_DELIM

@@ -1,0 +1,160 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref.py oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import make_csv_dfa, make_log_dfa, make_simple_dfa
+
+# ---------------------------------------------------------------------------
+# dfa_scan
+# ---------------------------------------------------------------------------
+
+DFAS = {"csv": make_csv_dfa(), "clf": make_log_dfa(), "simple": make_simple_dfa()}
+
+
+@pytest.mark.parametrize("dfa_name", list(DFAS))
+@pytest.mark.parametrize("n_chunks,chunk_bytes,block", [
+    (64, 32, 64), (256, 64, 128), (128, 31, 32), (512, 16, 256),
+])
+def test_dfa_scan_chunk_vectors(rng, dfa_name, n_chunks, chunk_bytes, block):
+    from repro.kernels.dfa_scan import ops, ref
+    dfa = DFAS[dfa_name]
+    alphabet = np.frombuffer(b',"\n# ab[]\t', np.uint8)
+    chunks = jnp.asarray(
+        alphabet[rng.integers(0, len(alphabet), size=n_chunks * chunk_bytes)]
+        .reshape(n_chunks, chunk_bytes)
+    )
+    got = ops.chunk_vectors(chunks, dfa, block_chunks=block)
+    want = ref.chunk_vectors(chunks, dfa)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dfa_name", list(DFAS))
+def test_dfa_scan_replay(rng, dfa_name):
+    from repro.kernels.dfa_scan import ops, ref
+    dfa = DFAS[dfa_name]
+    alphabet = np.frombuffer(b',"\n#xy z', np.uint8)
+    chunks = jnp.asarray(
+        alphabet[rng.integers(0, len(alphabet), size=256 * 48)].reshape(256, 48)
+    )
+    starts = jnp.asarray(rng.integers(0, dfa.n_states, size=256), jnp.int32)
+    c_k, e_k = ops.replay(chunks, starts, dfa, block_chunks=64)
+    c_r, e_r = ref.replay(chunks, starts, dfa)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_r))
+
+
+def test_dfa_scan_end_to_end_matches_pipeline(rng):
+    from repro.kernels.dfa_scan import ops
+    from repro.core.transition import transition_pipeline
+    dfa = DFAS["csv"]
+    alphabet = np.frombuffer(b',"\nabc', np.uint8)
+    chunks = jnp.asarray(
+        alphabet[rng.integers(0, len(alphabet), size=512 * 64)].reshape(512, 64)
+    )
+    cls_k, _ = ops.parse_classes(chunks, dfa)
+    cls_j, _, _ = transition_pipeline(chunks, dfa)
+    np.testing.assert_array_equal(np.asarray(cls_k), np.asarray(cls_j))
+
+
+# ---------------------------------------------------------------------------
+# numparse
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [8, 11, 16])
+@pytest.mark.parametrize("rows,block", [(512, 128), (1024, 512)])
+def test_numparse_int(rng, width, rows, block):
+    from repro.kernels.numparse import ops as k_ops
+    from repro.kernels.numparse import ref as k_ref
+    # mixture of valid ints, junk, empties
+    strs = []
+    for _ in range(rows):
+        u = rng.random()
+        if u < 0.6:
+            strs.append(str(int(rng.integers(-10**8, 10**8))))
+        elif u < 0.75:
+            strs.append("x1y")
+        elif u < 0.85:
+            strs.append("")
+        else:
+            strs.append("+%d" % int(rng.integers(0, 10**6)))
+    byts = np.zeros((rows, width), np.uint8)
+    lens = np.zeros((rows,), np.int32)
+    for i, s in enumerate(strs):
+        bs = s.encode()[:width]
+        byts[i, : len(bs)] = np.frombuffer(bs, np.uint8)
+        lens[i] = len(bs)
+    got_v, got_ok = k_ops.parse_int_fields(jnp.asarray(byts), jnp.asarray(lens), block_rows=block)
+    want_v, want_ok = k_ref.parse_int_fields(jnp.asarray(byts), jnp.asarray(lens))
+    np.testing.assert_array_equal(np.asarray(got_ok), np.asarray(want_ok))
+    ok = np.asarray(got_ok)
+    np.testing.assert_array_equal(np.asarray(got_v)[ok], np.asarray(want_v)[ok])
+    # cross-check against python int() (on the width-truncated field the
+    # kernel actually saw)
+    for i, s in enumerate(strs):
+        if ok[i]:
+            assert int(np.asarray(got_v)[i]) == int(s[:width]), (i, s)
+
+
+# ---------------------------------------------------------------------------
+# flashattn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,window", [
+    (2, 4, 4, 256, 256, 64, True, None),
+    (1, 8, 2, 128, 256, 64, False, None),   # GQA, cross-attn style
+    (1, 4, 1, 256, 256, 32, True, 128),     # MQA + sliding window
+    (2, 2, 2, 384, 384, 128, True, None),
+])
+def test_flashattn_vs_ref(rng, dtype, b, hq, hkv, sq, skv, d, causal, window):
+    from repro.kernels.flashattn import ops as f_ops
+    from repro.kernels.flashattn import ref as f_ref
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    got = f_ops.flash_attention(q, k, v, causal=causal, window=window, block_q=128, block_kv=128)
+    want = f_ref.flash_attention(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flashattn_block_shape_sweep(rng):
+    from repro.kernels.flashattn import ops as f_ops
+    from repro.kernels.flashattn import ref as f_ref
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    want = f_ref.flash_attention(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        got = f_ops.flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dfa_name", list(DFAS))
+def test_dfa_scan_replay_fused_summaries(rng, dfa_name):
+    """Fused replay+summary kernel == separate replay + chunk_summaries."""
+    from repro.core import offsets as offs_mod
+    from repro.core.transition import byte_groups, replay as jnp_replay
+    from repro.kernels.dfa_scan import ops
+    import jax.numpy as jnp
+
+    dfa = DFAS[dfa_name]
+    alphabet = np.frombuffer(b',"\n#xy z', np.uint8)
+    chunks = jnp.asarray(
+        alphabet[rng.integers(0, len(alphabet), size=256 * 32)].reshape(256, 32)
+    )
+    starts = jnp.zeros((256,), jnp.int32) + dfa.start_state
+
+    cls_k, ends_k, summ = ops.replay_fused(chunks, starts, dfa, block_chunks=64)
+    groups = byte_groups(chunks, dfa)
+    cls_r, ends_r, _ = jnp_replay(groups, starts, dfa)
+    np.testing.assert_array_equal(np.asarray(cls_k), np.asarray(cls_r))
+    np.testing.assert_array_equal(np.asarray(ends_k), np.asarray(ends_r))
+
+    ref = offs_mod.chunk_summaries(cls_r)
+    np.testing.assert_array_equal(np.asarray(summ[:, 0]), np.asarray(ref.rec_count))
+    np.testing.assert_array_equal(np.asarray(summ[:, 1]), np.asarray(ref.col_tag))
+    np.testing.assert_array_equal(np.asarray(summ[:, 2]), np.asarray(ref.col_off))

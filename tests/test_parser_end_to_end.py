@@ -1,0 +1,159 @@
+"""End-to-end parser vs Python's csv module (the gold-standard oracle),
+across tagging modes, partition impls, chunk sizes, and skewed inputs."""
+import csv as pycsv
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from tests.conftest import random_csv_table
+
+DTYPES = ("int32", "str", "float32", "date")
+SCHEMA = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"), ("d", "date"))
+
+
+def _check_against_oracle(rows, result, parser, n_cols):
+    arrow = parser.to_arrow(result)
+    n = int(result.validation.n_records)
+    assert n == len(rows)
+    for r, row in enumerate(rows):
+        # int column
+        v = arrow["a"]
+        if row[0] == "":
+            assert not _bit(v["validity"], r)
+        else:
+            assert _bit(v["validity"], r), (r, row)
+            assert int(v["values"][r]) == int(row[0])
+        # str column
+        s = arrow["b"]
+        got = bytes(s["data"][s["offsets"][r]: s["offsets"][r + 1]]).decode()
+        assert got == row[1], (r, got, row[1])
+        # float column
+        f = arrow["c"]
+        if row[2] == "":
+            assert not _bit(f["validity"], r)
+        else:
+            assert _bit(f["validity"], r)
+            np.testing.assert_allclose(f["values"][r], np.float32(float(row[2])), rtol=2e-6)
+        # date column
+        d = arrow["d"]
+        if row[3] == "":
+            assert not _bit(d["validity"], r)
+        else:
+            import datetime as dt
+            fmt = "%Y-%m-%d %H:%M:%S" if len(row[3]) > 10 else "%Y-%m-%d"
+            ts = dt.datetime.strptime(row[3], fmt).replace(tzinfo=dt.timezone.utc).timestamp()
+            assert int(d["values"][r]) == int(ts)
+
+
+def _bit(packed, i):
+    return bool((packed[i // 8] >> (i % 8)) & 1)
+
+
+@pytest.mark.parametrize("partition_impl", ["scatter", "argsort"])
+@pytest.mark.parametrize("chunk", [31, 64])
+def test_random_tables_tagged(rng, partition_impl, chunk):
+    rows, data = random_csv_table(rng, 40, DTYPES)
+    cfg = ParserConfig(
+        dfa=make_csv_dfa(), schema=SCHEMA, max_records=64,
+        chunk_size=chunk, partition_impl=partition_impl,
+    )
+    p = Parser(cfg)
+    res = p.parse(data)
+    assert bool(res.validation.ok)
+    _check_against_oracle(rows, res, p, 4)
+
+
+@pytest.mark.parametrize("tagging", ["inline", "vector"])
+def test_alternative_tagging_modes(rng, tagging):
+    rows, data = random_csv_table(rng, 30, DTYPES, empty_prob=0.15)
+    cfg = ParserConfig(
+        dfa=make_csv_dfa(), schema=SCHEMA, max_records=64, tagging=tagging,
+    )
+    p = Parser(cfg)
+    res = p.parse(data)
+    assert bool(res.validation.ok)
+    _check_against_oracle(rows, res, p, 4)
+
+
+def test_matmul_scan_path(rng):
+    rows, data = random_csv_table(rng, 20, DTYPES)
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=32,
+                       use_matmul_scan=True)
+    p = Parser(cfg)
+    res = p.parse(data)
+    assert bool(res.validation.ok)
+    _check_against_oracle(rows, res, p, 4)
+
+
+def test_skewed_record(rng):
+    """Paper Fig. 11 (right): one huge record among normal ones must not
+    break anything (robustness to skew)."""
+    big = "x" * 20000 + ',y"z' * 100
+    rows = [["1", "small", "2.0", "2021-01-01"],
+            ["2", big, "3.0", "2021-01-02"],
+            ["3", "small2", "4.0", "2021-01-03"]]
+    buf = io.StringIO()
+    pycsv.writer(buf, lineterminator="\n").writerows(rows)
+    data = buf.getvalue().encode()
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=8)
+    p = Parser(cfg)
+    res = p.parse(data)
+    assert bool(res.validation.ok)
+    _check_against_oracle(rows, res, p, 4)
+
+
+def test_comments_and_crlf():
+    dfa = make_csv_dfa(comment=b"#")
+    schema = Schema.of(("a", "int32"), ("b", "str"))
+    data = b"# leading comment\r\n1,foo\r\n# mid\r\n2,bar\r\n"
+    p = Parser(ParserConfig(dfa=dfa, schema=schema, max_records=8))
+    res = p.parse(data)
+    assert bool(res.validation.ok)
+    assert int(res.validation.n_records) == 2
+    arrow = p.to_arrow(res)
+    assert list(arrow["a"]["values"][:2]) == [1, 2]
+    got = bytes(arrow["b"]["data"][arrow["b"]["offsets"][0]: arrow["b"]["offsets"][1]])
+    assert got == b"foo"
+
+
+def test_invalid_input_flags():
+    p = Parser(ParserConfig(dfa=make_csv_dfa(), schema=Schema.of(("a", "str"),), max_records=8))
+    res = p.parse(b'"unterminated quote\n')  # EOF inside quotes
+    assert not bool(res.validation.ok)
+    res2 = p.parse(b'ab"cd\n')  # quote mid-unquoted-field -> INV
+    assert not bool(res2.validation.no_invalid)
+
+
+def test_ragged_records_and_column_count():
+    schema = Schema.of(("a", "str"), ("b", "str"), ("c", "str"))
+    p = Parser(ParserConfig(dfa=make_csv_dfa(), schema=schema, max_records=8,
+                            validate_columns=True))
+    res = p.parse(b"1,Apples\n2\n3,4,5\n")  # paper §4.1's ragged example
+    assert int(res.validation.n_records) == 3
+    assert int(res.validation.min_columns) == 1
+    assert int(res.validation.max_columns) == 3
+    assert not bool(res.validation.ok)  # not all records have 3 columns
+    rec_ok = np.asarray(res.validation.record_ok[:3])
+    np.testing.assert_array_equal(rec_ok, [False, False, True])
+
+
+def test_streaming_state_carry():
+    """initial_state threading: a partition cut inside a quoted field parses
+    correctly when seeded with the previous partition's end state."""
+    schema = Schema.of(("a", "str"), ("b", "str"))
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=schema, max_records=8, chunk_size=8)
+    p = Parser(cfg)
+    part1 = b'x,"abc\n'      # ends INSIDE the quoted field -> state ENC
+    part2 = b'def"\ny,z\n'
+    # prepare() would append a record delimiter; raw carry tests pad manually.
+    import jax.numpy as jnp
+    raw1 = np.frombuffer(part1.ljust(8, b"\x00"), np.uint8).reshape(-1, 8)
+    r1 = p.parse_chunks(jnp.asarray(raw1))
+    end1 = r1.end_state
+    raw2 = np.frombuffer(part2.ljust(16, b"\x00"), np.uint8).reshape(-1, 8)
+    r2 = p.parse_chunks(jnp.asarray(raw2), initial_state=end1)
+    # the "def" bytes must be classified as data continuing the quoted field:
+    # if carry were ignored they'd open a fresh record at column 0.
+    assert int(r2.validation.n_records) == 2

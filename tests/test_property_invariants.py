@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system invariants:
+
+  * typeconv round-trips (int/float/date) against Python's parsers
+  * partition stability + permutation correctness
+  * segmented-Horner == fixed-width-gather int parsing
+  * chunked SSD == sequential recurrence across shapes
+"""
+import datetime as dt
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import partition as partition_mod
+from repro.core import typeconv
+
+
+def _pack(strs, width=None):
+    lens = np.asarray([len(s) for s in strs], np.int32)
+    width = width or (int(lens.max()) if len(strs) else 1)
+    offs = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+    css = np.frombuffer("".join(strs).encode(), np.uint8)
+    if css.size == 0:
+        css = np.zeros(1, np.uint8)
+    return jnp.asarray(css), jnp.asarray(offs), jnp.asarray(lens), width
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(-(10**8), 10**8), min_size=1, max_size=40))
+def test_int_roundtrip(values):
+    strs = [str(v) for v in values]
+    css, offs, lens, w = _pack(strs)
+    parsed = typeconv.parse_int(css, offs, lens, width=max(w, 1))
+    assert bool(parsed.valid.all())
+    np.testing.assert_array_equal(np.asarray(parsed.value), np.asarray(values, np.int32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(
+    st.floats(min_value=-1e6, max_value=1e6, allow_nan=False).map(lambda v: f"{v:.5g}"),
+    min_size=1, max_size=30,
+))
+def test_float_roundtrip(strs):
+    css, offs, lens, w = _pack(strs)
+    parsed = typeconv.parse_float(css, offs, lens, width=max(w, 1))
+    assert bool(parsed.valid.all()), strs
+    np.testing.assert_allclose(
+        np.asarray(parsed.value), np.asarray([float(s) for s in strs], np.float32),
+        rtol=3e-6, atol=1e-30,
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_date_roundtrip(ts):
+    d = dt.datetime.fromtimestamp(ts, dt.timezone.utc).replace(microsecond=0)
+    s = d.strftime("%Y-%m-%d %H:%M:%S")
+    css, offs, lens, _ = _pack([s])
+    parsed = typeconv.parse_date(css, offs, lens)
+    assert bool(parsed.valid[0])
+    assert int(parsed.value[0]) == int(d.timestamp())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 10**8), min_size=1, max_size=25))
+def test_segmented_equals_gather(values):
+    strs = [str(v) for v in values]
+    css, offs, lens, w = _pack(strs)
+    fid = jnp.asarray(np.repeat(np.arange(len(strs)), np.asarray(lens)), jnp.int32)
+    fstart = np.zeros(int(np.asarray(lens).sum()) or 1, bool)
+    fstart[np.asarray(offs)[: len(strs)]] = True
+    seg = typeconv.parse_int_segmented(css, jnp.asarray(fstart), fid, len(strs))
+    gat = typeconv.parse_int(css, offs, lens, width=max(w, 1))
+    both = np.asarray(seg.valid) & np.asarray(gat.valid)
+    np.testing.assert_array_equal(np.asarray(seg.value)[both], np.asarray(gat.value)[both])
+    # segmented is valid whenever gather is (≤9 digits)
+    assert bool((np.asarray(seg.valid) | ~(np.asarray(gat.valid) & (np.asarray(lens) <= 9))).all())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 500), st.integers(2, 8))
+def test_partition_impls_agree_and_stable(seed, n, c):
+    rng = np.random.default_rng(seed)
+    tags = jnp.asarray(rng.integers(0, c + 1, size=n), jnp.int32)  # incl. sentinel
+    a = partition_mod.partition_argsort(tags, c)
+    b = partition_mod.partition_scatter(tags, c)
+    d = partition_mod.partition_scatter2(tags, c)
+    np.testing.assert_array_equal(np.asarray(a.perm), np.asarray(d.perm))
+    np.testing.assert_array_equal(np.asarray(a.perm), np.asarray(b.perm))
+    np.testing.assert_array_equal(np.asarray(a.col_start), np.asarray(b.col_start))
+    # stability: positions within a column are increasing source indices
+    perm = np.asarray(a.perm)
+    tags_np = np.asarray(tags)
+    for col in range(c + 1):
+        src = perm[tags_np[perm] == col]
+        assert (np.diff(src) > 0).all() if src.size > 1 else True
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([8, 16, 32]),
+       st.sampled_from([4, 8]), st.sampled_from([4, 16]))
+def test_ssd_chunked_equals_recurrence(seed, s, h, n):
+    from repro.models import ssm as S
+    rng = np.random.default_rng(seed)
+    b, p = 2, 4
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dtv = jnp.asarray(rng.uniform(0.01, 0.3, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.2, 2.0, size=(h,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    y_ref, st_ref = S.ssd_reference(x, dtv, a, bm, cm)
+    for chunk in (4, 8, s):
+        if s % chunk:
+            continue
+        y, st_f = S.ssd_chunked(x, dtv, a, bm, cm, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(st_f), np.asarray(st_ref), atol=2e-4, rtol=2e-4)

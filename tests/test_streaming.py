@@ -1,0 +1,90 @@
+"""Streaming parser: partition boundaries inside quoted fields, carry-over
+stitching, and oracle equality for the full stream (paper §4.4)."""
+import numpy as np
+import pytest
+
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core.streaming import StreamingParser
+from tests.conftest import random_csv_table
+
+SCHEMA = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"), ("d", "date"))
+DTYPES = ("int32", "str", "float32", "date")
+
+
+def _source(data: bytes, step: int):
+    for i in range(0, len(data), step):
+        yield data[i : i + step]
+
+
+@pytest.mark.parametrize("partition_bytes", [97, 256, 1024])
+def test_stream_equals_oracle(rng, partition_bytes):
+    rows, data = random_csv_table(rng, 60, DTYPES, quote_prob=0.8, newline_prob=0.5)
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=64, chunk_size=32)
+    sp = StreamingParser(Parser(cfg), partition_bytes, max_carry_bytes=2048)
+    out = sp.parse_all(_source(data, 53))
+    assert sp.stats.records == len(rows)
+    for r, row in enumerate(rows):
+        if row[0] != "":
+            assert out["a"]["validity"][r]
+            assert int(out["a"]["values"][r]) == int(row[0])
+        got = bytes(out["b"]["data"][out["b"]["offsets"][r]: out["b"]["offsets"][r + 1]])
+        assert got.decode() == row[1], (r, got, row[1])
+        if row[2] != "":
+            np.testing.assert_allclose(out["c"]["values"][r], np.float32(float(row[2])), rtol=2e-6)
+
+
+def test_partition_cut_inside_quotes():
+    """A partition boundary in the middle of a quoted field containing
+    record delimiters — the adversarial case for context-free chunking."""
+    row_b = "A" * 40 + "\n,\n,\n" + "B" * 40  # newlines+commas inside quotes
+    data = f'1,"{row_b}",2.5\n2,"tail",3.5\n'.encode()
+    cfg = ParserConfig(
+        dfa=make_csv_dfa(),
+        schema=Schema.of(("a", "int32"), ("b", "str"), ("c", "float32")),
+        max_records=16, chunk_size=16,
+    )
+    sp = StreamingParser(Parser(cfg), partition_bytes=48, max_carry_bytes=256)
+    out = sp.parse_all(_source(data, 17))
+    assert sp.stats.records == 2
+    got = bytes(out["b"]["data"][out["b"]["offsets"][0]: out["b"]["offsets"][1]])
+    assert got.decode() == row_b
+    np.testing.assert_allclose(out["c"]["values"], [2.5, 3.5])
+
+
+def test_record_larger_than_partition():
+    big = "x" * 700
+    data = f'1,"{big}",1.0\n2,b,2.0\n'.encode()
+    cfg = ParserConfig(
+        dfa=make_csv_dfa(),
+        schema=Schema.of(("a", "int32"), ("b", "str"), ("c", "float32")),
+        max_records=8, chunk_size=32,
+    )
+    sp = StreamingParser(Parser(cfg), partition_bytes=128, max_carry_bytes=1024)
+    out = sp.parse_all(_source(data, 64))
+    assert sp.stats.records == 2
+    got = bytes(out["b"]["data"][out["b"]["offsets"][0]: out["b"]["offsets"][1]])
+    assert got.decode() == big
+    assert sp.stats.max_carry >= 128  # the carry really did grow past a partition
+
+
+def test_capacity_overflow_raises():
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=Schema.of(("a", "str"),),
+                       max_records=4, chunk_size=16)
+    sp = StreamingParser(Parser(cfg), partition_bytes=32, max_carry_bytes=32)
+    data = b'"' + b"y" * 500 + b'"\n'
+    with pytest.raises(ValueError, match="record longer than capacity"):
+        list(sp.parse_stream(_source(data, 16)))
+
+
+def test_no_trailing_newline(rng):
+    rows, data = random_csv_table(rng, 10, ("int32", "str"))
+    data = data.rstrip(b"\n")
+    cfg = ParserConfig(dfa=make_csv_dfa(),
+                       schema=Schema.of(("a", "int32"), ("b", "str")),
+                       max_records=16, chunk_size=16)
+    sp = StreamingParser(Parser(cfg), partition_bytes=64, max_carry_bytes=256)
+    out = sp.parse_all(_source(data, 31))
+    assert sp.stats.records == len(rows)
+    r = len(rows) - 1
+    got = bytes(out["b"]["data"][out["b"]["offsets"][r]: out["b"]["offsets"][r + 1]])
+    assert got.decode() == rows[r][1]
