@@ -6,6 +6,11 @@
   * fig12 — streaming partition-size sweep
   * fig13 — end-to-end vs baselines (python csv, numpy split, chunked-
             at-newline "Inst.Loading-style" constrained parser)
+  * backends — backend=reference vs backend=pallas through the unified
+            stage pipeline (core/stages.py), so the perf trajectory tracks
+            the kernel path.  NOTE: on this CPU container the Pallas
+            kernels run in interpret mode — the number is a correctness-
+            under-load datapoint, not the TPU projection.
 
 All wall-clock on the CPU backend (this container's "device"); the TPU-
 projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
@@ -58,6 +63,24 @@ def fig11_tagging_modes():
     chunks = p.prepare(skew)
     dt, _ = time_fn(p.parse_chunks, jnp.asarray(chunks))
     emit("fig11/skewed/tagged", dt * 1e6, f"{gbps(len(skew), dt):.3f}GB/s")
+
+
+def backend_sweep(n_records=250):
+    """reference vs pallas through the same jitted pipeline (small input:
+    interpret-mode kernels are slow on CPU; the sweep is about keeping the
+    kernel path honest in the perf log, and flags any output divergence)."""
+    data = dataset("yelp", n_records)
+    results = {}
+    for backend in ("reference", "pallas"):
+        p = yelp_parser(max_records=1 << 12, backend=backend)
+        chunks = jnp.asarray(p.prepare(data))
+        dt, out = time_fn(p.parse_chunks, chunks, warmup=1, iters=2)
+        results[backend] = out
+        emit(f"backends/yelp/{backend}", dt * 1e6,
+             f"{gbps(len(data), dt):.3f}GB/s;records={int(out.validation.n_records)}")
+    same = np.array_equal(np.asarray(results["reference"].css),
+                          np.asarray(results["pallas"].css))
+    emit("backends/yelp/css_match", 0.0, f"identical={same}")
 
 
 def fig12_partition_size():
@@ -151,5 +174,6 @@ def run():
     fig9_chunk_size()
     fig10_input_size()
     fig11_tagging_modes()
+    backend_sweep()
     fig12_partition_size()
     fig13_end_to_end()

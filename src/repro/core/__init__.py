@@ -14,9 +14,14 @@ from repro.core.dfa import (
     make_log_dfa,
     make_simple_dfa,
 )
+from repro.core.backends import ParseBackend, available_backends, get_backend, register_backend
 from repro.core.parser import Column, ParseResult, Parser, ParserConfig, Schema
 
 __all__ = [
+    "ParseBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
     "CONTROL",
     "DATA",
     "FIELD_DELIM",

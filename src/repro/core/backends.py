@@ -1,0 +1,193 @@
+"""Pluggable parse-stage backends (DESIGN.md §2; paper §3.1–§3.3).
+
+Every driver — ``Parser``, ``DistributedParser``, ``StreamingParser`` — runs
+the *same* stage functions from :mod:`repro.core.stages`; what varies is who
+implements the byte-level hot loops.  A :class:`ParseBackend` bundles the
+three swappable stage implementations:
+
+  * ``chunk_vectors``     — §3.1 first pass: per-chunk state-transition
+    vectors (the |S|-simultaneous-DFA sweep over every byte).
+  * ``replay_summaries``  — §3.1 second pass fused with the §3.2 per-chunk
+    offset summaries: class codes + end states + (rec_count, col_tag,
+    col_off) triples in one sweep.
+  * ``parse_int``         — §3.3 int32 conversion over gathered field bytes.
+
+Backends:
+
+  * ``reference`` — the pure-jnp path (``core.transition`` /
+    ``core.offsets`` / ``core.typeconv``); always available, the oracle.
+  * ``pallas``    — the Pallas TPU kernels (``kernels.dfa_scan`` /
+    ``kernels.numparse``).  The fused replay kernel makes the separate
+    ``chunk_summaries`` jnp pass disappear.  ``cfg.interpret`` /
+    ``cfg.block_chunks`` carry the kernel knobs.
+
+Stage functions receive the ``ParserConfig`` duck-typed (``cfg.dfa``,
+``cfg.interpret``, ``cfg.block_chunks``, ``cfg.int_width``) so kernel knobs
+travel with the config instead of threading through every call site, and so
+this module never imports :mod:`repro.core.parser` (no cycle).
+
+The registry is open: future PRs add a backend (e.g. a Mosaic-GPU or a
+partially-fused one) with :func:`register_backend` and every driver picks it
+up through ``ParserConfig.backend``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offsets as offsets_mod
+from repro.core import transition as tr
+from repro.core import typeconv as typeconv_mod
+from repro.core.dfa import PAD_BYTE
+
+#: Default chunk-block size for the Pallas grid (mirrors
+#: ``kernels.dfa_scan.dfa_scan.DEFAULT_BLOCK_CHUNKS`` without importing the
+#: kernel package at module load).
+DEFAULT_BLOCK_CHUNKS = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ParseBackend:
+    """Bundle of swappable stage implementations (see module docstring).
+
+    Signatures (all traced under the driver's jit):
+      chunk_vectors(chunks (C,K) u8, cfg) -> (C,S) i32
+      replay_summaries(chunks (C,K) u8, start (C,) i32, cfg)
+          -> (classes (C,K) u8, end_states (C,) i32, saw_invalid (C,) bool,
+              offsets.ChunkSummary)
+      parse_int(css (N,) u8, offset (R,) i32, length (R,) i32, cfg)
+          -> typeconv.Parsed
+    """
+
+    name: str
+    chunk_vectors: Callable
+    replay_summaries: Callable
+    parse_int: Callable
+
+
+BACKENDS: Dict[str, ParseBackend] = {}
+
+
+def register_backend(backend: ParseBackend) -> ParseBackend:
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> ParseBackend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown parser backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(BACKENDS))
+
+
+def pad_to_block(arr: jax.Array, block: int, fill) -> Tuple[jax.Array, int]:
+    """Pad ``arr``'s leading axis up to a multiple of ``block``.
+
+    Returns ``(padded, original_length)``; padding rows are ``fill`` and are
+    inert by construction (PAD bytes / dummy states / zero-length fields), so
+    callers slice results back to ``original_length``.
+    """
+    n = arr.shape[0]
+    pad = (-n) % block
+    if pad == 0:
+        return arr, n
+    padding = jnp.full((pad,) + arr.shape[1:], fill, arr.dtype)
+    return jnp.concatenate([arr, padding], axis=0), n
+
+
+def _saw_invalid(end_states: jax.Array, dfa) -> jax.Array:
+    """The invalid sink is absorbing, so "ever hit" == "ended there"."""
+    if dfa.invalid_state is None:
+        return jnp.zeros(end_states.shape, bool)
+    return end_states == dfa.invalid_state
+
+
+# ---------------------------------------------------------------------------
+# reference backend — pure jnp (core.transition / core.offsets / core.typeconv)
+# ---------------------------------------------------------------------------
+
+def _ref_chunk_vectors(chunks: jax.Array, cfg) -> jax.Array:
+    groups = tr.byte_groups(chunks, cfg.dfa)
+    return tr.chunk_transition_vectors(groups, cfg.dfa)
+
+
+def _ref_replay_summaries(chunks: jax.Array, start: jax.Array, cfg):
+    groups = tr.byte_groups(chunks, cfg.dfa)
+    classes, end_states, saw_invalid = tr.replay(groups, start, cfg.dfa)
+    summaries = offsets_mod.chunk_summaries(classes)
+    return classes, end_states, saw_invalid, summaries
+
+
+def _ref_parse_int(css, offset, length, cfg) -> typeconv_mod.Parsed:
+    return typeconv_mod.parse_int(css, offset, length, width=cfg.int_width)
+
+
+REFERENCE = register_backend(ParseBackend(
+    name="reference",
+    chunk_vectors=_ref_chunk_vectors,
+    replay_summaries=_ref_replay_summaries,
+    parse_int=_ref_parse_int,
+))
+
+
+# ---------------------------------------------------------------------------
+# pallas backend — kernels.dfa_scan + kernels.numparse
+# ---------------------------------------------------------------------------
+
+def _block_chunks(cfg, c: int) -> int:
+    return min(getattr(cfg, "block_chunks", DEFAULT_BLOCK_CHUNKS) or
+               DEFAULT_BLOCK_CHUNKS, c)
+
+
+def _pl_chunk_vectors(chunks: jax.Array, cfg) -> jax.Array:
+    from repro.kernels.dfa_scan import dfa_scan
+
+    bc = _block_chunks(cfg, chunks.shape[0])
+    padded, n = pad_to_block(chunks, bc, PAD_BYTE)
+    vecs = dfa_scan.chunk_vectors(
+        padded, cfg.dfa, block_chunks=bc, interpret=cfg.interpret
+    )
+    return vecs[:n]
+
+
+def _pl_replay_summaries(chunks: jax.Array, start: jax.Array, cfg):
+    from repro.kernels.dfa_scan import dfa_scan
+
+    bc = _block_chunks(cfg, chunks.shape[0])
+    padded, n = pad_to_block(chunks, bc, PAD_BYTE)
+    start_p, _ = pad_to_block(
+        start.astype(jnp.int32), bc, cfg.dfa.start_state
+    )
+    classes, end_states, summ = dfa_scan.replay_fused(
+        padded, start_p, cfg.dfa, block_chunks=bc, interpret=cfg.interpret
+    )
+    classes, end_states, summ = classes[:n], end_states[:n], summ[:n]
+    summaries = offsets_mod.ChunkSummary(
+        rec_count=summ[:, 0], col_tag=summ[:, 1], col_off=summ[:, 2]
+    )
+    return classes, end_states, _saw_invalid(end_states, cfg.dfa), summaries
+
+
+def _pl_parse_int(css, offset, length, cfg) -> typeconv_mod.Parsed:
+    from repro.kernels.numparse import ops as numparse_ops
+
+    return numparse_ops.parse_int_column(
+        css, offset, length, width=cfg.int_width, interpret=cfg.interpret
+    )
+
+
+PALLAS = register_backend(ParseBackend(
+    name="pallas",
+    chunk_vectors=_pl_chunk_vectors,
+    replay_summaries=_pl_replay_summaries,
+    parse_int=_pl_parse_int,
+))

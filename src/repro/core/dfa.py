@@ -232,8 +232,12 @@ def make_csv_dfa(
         name=name or ("csv" if comment is None else "csv+comment"),
         transition=T,
         emission=E,
+        # All entries are distinguished bytes (the catch-all group has no
+        # byte and was never appended) — dropping the last entry here would
+        # lose PAD and make the kernels' compare-based matching classify
+        # padding as data.
         group_of=_lut(groups, n_groups, G_ANY),
-        group_bytes=tuple(group_bytes[:-1]),  # drop the catch-all placeholder
+        group_bytes=tuple(group_bytes),
         start_state=EOR,
         accept=accept,
         invalid_state=INV,

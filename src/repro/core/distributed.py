@@ -21,7 +21,6 @@ trivially.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Sequence
 
 import jax
@@ -29,13 +28,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import fields as fields_mod
+from repro.core import backends as backends_mod
 from repro.core import offsets as offsets_mod
-from repro.core import partition as partition_mod
-from repro.core import tagging as tagging_mod
+from repro.core import stages as stages_mod
 from repro.core import transition as tr
-from repro.core import typeconv as typeconv_mod
-from repro.core.dfa import Dfa
 from repro.core.parser import ParserConfig
 
 
@@ -81,22 +77,17 @@ def _device_prefix_offsets(rec: jax.Array, col_t: jax.Array, col_o: jax.Array, a
 
 def _shard_parse(chunks: jax.Array, cfg: ParserConfig, axis: str) -> ShardedParse:
     """Runs on every device under shard_map; ``chunks (C_local, K)``."""
-    dfa = cfg.dfa
-    n_cols = cfg.schema.n_cols
+    backend = backends_mod.get_backend(cfg.backend)
 
-    # ---- §3.1 across the mesh: context determination --------------------
-    groups = tr.byte_groups(chunks, dfa)
-    vecs = tr.chunk_transition_vectors(groups, dfa)
-    local_comp = tr.fold_vectors(vecs)
-    prefix = _device_prefix_vec(local_comp, axis)
-    local_excl = tr.exclusive_scan_vectors(vecs, use_matmul=cfg.use_matmul_scan)
-    # apply the cross-device prefix first, then the local exclusive composite
-    scanned = tr.compose(jnp.broadcast_to(prefix, local_excl.shape), local_excl)
-    start = tr.start_states(scanned, dfa)
-    classes, _, _ = tr.replay(groups, start, dfa)
+    # ---- §3.1 across the mesh: context determination (shared stage with a
+    # cross-device prefix plugged in) --------------------------------------
+    ctx = stages_mod.determine_contexts(
+        chunks, cfg, backend,
+        prefix_fn=lambda vecs: _device_prefix_vec(tr.fold_vectors(vecs), axis),
+    )
 
     # ---- §3.2 across the mesh: record/column offsets ---------------------
-    summ = offsets_mod.chunk_summaries(classes)
+    summ = ctx.summaries
     rec_l, t_l, o_l = offsets_mod.fold_summary(summ)
     rec_base, t_p, o_p, n_total = _device_prefix_offsets(rec_l, t_l, o_l, axis)
 
@@ -107,40 +98,23 @@ def _shard_parse(chunks: jax.Array, cfg: ParserConfig, axis: str) -> ShardedPars
         (local_offs.col_tag, local_offs.col_offset),
     )
     offs = offsets_mod.ChunkOffsets(local_offs.rec_offset + rec_base, g_t, g_o)
-    ids = offsets_mod.symbol_ids_from_chunks(classes, offs)
+    ids = stages_mod.identify_symbols(ctx, chunk_offsets=offs)
 
-    # ---- §3.3 locally: tagging, partition, field index -------------------
-    flat_classes = classes.reshape(-1)
+    # ---- §3.3 locally: tagging, partition, field index (shared stage) ----
     # Record tags are shard-local (0-based) so the field index stays small;
     # rec_base restores global ids.
     local_rec = ids.record_id - rec_base
-    tagged = tagging_mod.tag_symbols(
-        chunks, flat_classes, local_rec, ids.column_id, n_cols, cfg.tagging
+    cols = stages_mod.build_columns(
+        chunks, ctx.classes, local_rec, ids.column_id, cfg
     )
-    part = partition_mod.PARTITION_IMPLS[cfg.partition_impl](tagged.col_tag, n_cols)
-    if cfg.tagging == "tagged":
-        css, rec_sorted, col_sorted = partition_mod.apply_partition(
-            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag
-        )
-        flag_sorted = jnp.zeros_like(css, dtype=bool)
-    else:
-        css, rec_sorted, col_sorted, flag_sorted = partition_mod.apply_partition(
-            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag, tagged.delim_flag
-        )
-    if cfg.tagging == "tagged":
-        findex = fields_mod.field_index_tagged(col_sorted, rec_sorted, n_cols, cfg.max_records)
-    else:
-        findex = fields_mod.field_index_terminated(
-            flag_sorted, col_sorted, rec_sorted, part.col_start, n_cols, cfg.max_records
-        )
 
     return ShardedParse(
-        classes=flat_classes,
-        css=css,
-        col_start=part.col_start,
-        col_count=part.col_count,
-        field_offset=findex.offset,
-        field_length=findex.length,
+        classes=ctx.classes.reshape(-1),
+        css=cols.css,
+        col_start=cols.col_start,
+        col_count=cols.col_count,
+        field_offset=cols.findex.offset,
+        field_length=cols.findex.length,
         rec_base=rec_base.reshape(1),  # rank-1 so shards concatenate
         n_records=n_total,
     )

@@ -7,10 +7,15 @@ Pipeline (all on-device, one jit):
           ─▶ stable partition (CSS) ─▶ field index ─▶ type conversion
           ─▶ validation
 
-Static configuration (DFA, schema, chunk size, capacities) is baked into the
-jitted closure; the only traced input is the padded byte buffer, so repeated
-parses of same-shaped partitions reuse one executable — the property the
-streaming layer (core/streaming.py) relies on.
+The stage bodies live in ``core/stages.py`` and are shared with the
+distributed and streaming drivers; ``ParserConfig.backend`` selects who runs
+the byte-level hot loops (``"reference"`` jnp vs ``"pallas"`` kernels, see
+``core/backends.py``).
+
+Static configuration (DFA, schema, chunk size, capacities, backend) is baked
+into the jitted closure; the only traced input is the padded byte buffer, so
+repeated parses of same-shaped partitions reuse one executable — the
+property the streaming layer (core/streaming.py) relies on.
 """
 from __future__ import annotations
 
@@ -21,11 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fields as fields_mod
-from repro.core import offsets as offsets_mod
-from repro.core import partition as partition_mod
-from repro.core import tagging as tagging_mod
-from repro.core import transition as transition_mod
+from repro.core import backends as backends_mod
+from repro.core import stages as stages_mod
 from repro.core import typeconv as typeconv_mod
 from repro.core import validation as validation_mod
 from repro.core.dfa import PAD_BYTE, Dfa
@@ -68,6 +70,12 @@ class ParserConfig:
     int_width: int = 11
     float_width: int = 24
     validate_columns: bool = False
+    backend: str = "reference"       # reference | pallas (core/backends.py)
+    interpret: bool = True           # Pallas interpret mode (CPU container)
+    block_chunks: int = backends_mod.DEFAULT_BLOCK_CHUNKS
+
+    def __post_init__(self):
+        backends_mod.get_backend(self.backend)  # fail fast on typos
 
     @property
     def record_delim_byte(self) -> int:
@@ -90,90 +98,44 @@ class ParseResult(NamedTuple):
 
 def _parse_impl(raw_chunks: jax.Array, cfg: ParserConfig,
                 initial_state: jax.Array) -> ParseResult:
-    dfa = cfg.dfa
+    backend = backends_mod.get_backend(cfg.backend)
     n_cols = cfg.schema.n_cols
 
-    # §3.1 — parsing context via composite scan, then replay.
-    groups = transition_mod.byte_groups(raw_chunks, dfa)
-    vecs = transition_mod.chunk_transition_vectors(groups, dfa)
-    scanned = transition_mod.exclusive_scan_vectors(vecs, use_matmul=cfg.use_matmul_scan)
-    start = transition_mod.start_states(scanned, dfa, initial_state=initial_state)
-    classes, chunk_end, saw_invalid = transition_mod.replay(groups, start, dfa)
-    end_state = chunk_end[-1]
+    # §3.1/§3.2 — parsing context + fused per-chunk offset summaries.
+    ctx = stages_mod.determine_contexts(
+        raw_chunks, cfg, backend, initial_state=initial_state
+    )
+    end_state = ctx.end_states[-1]
 
-    # §3.2 — record/column identification.
-    flat_classes = classes.reshape(-1)
-    ids = offsets_mod.symbol_ids(flat_classes)
+    # §3.2 — record/column identification from the summaries.
+    ids = stages_mod.identify_symbols(ctx)
 
-    # §3.2/§4.1 — tagging (+ §4.3 column projection).
-    selected = None
-    if not all(c.selected for c in cfg.schema.columns):
-        selected = np.asarray([c.selected for c in cfg.schema.columns])
-    tagged = tagging_mod.tag_symbols(
-        raw_chunks, flat_classes, ids.record_id, ids.column_id, n_cols,
-        cfg.tagging, selected_mask=selected,
+    # §3.2/§3.3 — tagging, stable partition, field index (shared stage).
+    cols = stages_mod.build_columns(
+        raw_chunks, ctx.classes, ids.record_id, ids.column_id, cfg
     )
 
-    # §3.3 — stable partition into per-column CSS.
-    part = partition_mod.PARTITION_IMPLS[cfg.partition_impl](tagged.col_tag, n_cols)
-    if cfg.tagging == "tagged":
-        # delim_flag is structurally all-False in tagged mode: skip one
-        # N-sized gather+write (EXPERIMENTS.md §Perf parser iteration)
-        css, rec_sorted, col_sorted = partition_mod.apply_partition(
-            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag
-        )
-        flag_sorted = jnp.zeros_like(css, dtype=bool)
-    else:
-        css, rec_sorted, col_sorted, flag_sorted = partition_mod.apply_partition(
-            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag, tagged.delim_flag
-        )
-
-    # §3.3 — field index.
-    if cfg.tagging == "tagged":
-        findex = fields_mod.field_index_tagged(col_sorted, rec_sorted, n_cols, cfg.max_records)
-    else:
-        findex = fields_mod.field_index_terminated(
-            flag_sorted, col_sorted, rec_sorted, part.col_start, n_cols, cfg.max_records
-        )
-
     # §3.3 — type conversion.
-    values = {}
-    for c, col in enumerate(cfg.schema.columns):
-        if not col.selected:
-            continue
-        off = findex.offset[c]
-        ln = findex.length[c]
-        if col.dtype == "int32":
-            values[col.name] = typeconv_mod.parse_int(css, off, ln, width=cfg.int_width)
-        elif col.dtype == "float32":
-            values[col.name] = typeconv_mod.parse_float(css, off, ln, width=cfg.float_width)
-        elif col.dtype == "date":
-            values[col.name] = typeconv_mod.parse_date(css, off, ln)
-        else:
-            values[col.name] = typeconv_mod.parse_string_noop(css, off, ln)
+    values = stages_mod.convert_types(cols.css, cols.findex, cfg, backend)
 
     # §4.3 — validation.
+    flat_classes = ctx.classes.reshape(-1)
     val = validation_mod.validate(
-        flat_classes, ids.record_id, end_state, saw_invalid, dfa, cfg.max_records,
+        flat_classes, ids.record_id, end_state, ctx.saw_invalid, cfg.dfa,
+        cfg.max_records,
         expected_columns=n_cols if cfg.validate_columns else None,
     )
 
-    # Streaming support (paper §4.4): byte position of the last record
-    # delimiter — everything after it is the next partition's carry-over.
-    pos = jnp.arange(flat_classes.shape[0], dtype=jnp.int32)
-    from repro.core.dfa import RECORD_DELIM as _RD
-    last_rec = jnp.max(jnp.where(flat_classes == _RD, pos, -1))
-
     return ParseResult(
-        css=css,
-        col_start=part.col_start,
-        col_count=part.col_count,
-        field_offset=findex.offset,
-        field_length=findex.length,
+        css=cols.css,
+        col_start=cols.col_start,
+        col_count=cols.col_count,
+        field_offset=cols.findex.offset,
+        field_length=cols.findex.length,
         values=values,
         validation=val,
         end_state=end_state.astype(jnp.int32),
-        last_record_end=last_rec.astype(jnp.int32),
+        last_record_end=stages_mod.locate_carry(flat_classes),
     )
 
 

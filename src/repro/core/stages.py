@@ -1,0 +1,182 @@
+"""Shared parse-pipeline stages (paper §3.1–§3.3) — the single composition
+point every driver runs through.
+
+``Parser`` (single device), ``DistributedParser`` (shard_map over a mesh)
+and ``StreamingParser`` (partition-pipelined, via ``Parser``) all compose
+exactly these functions; the byte-level hot loops inside them come from the
+:class:`repro.core.backends.ParseBackend` selected by
+``ParserConfig.backend``:
+
+    determine_contexts  — §3.1 context determination + replay, fused with
+                          the §3.2 per-chunk offset summaries
+    identify_symbols    — §3.2 record/column ids from the chunk summaries
+    build_columns       — §3.2/§4.1 tagging → §3.3 stable partition →
+                          field index
+    convert_types       — §3.3 type conversion (int32 routed through the
+                          backend; float/date/str shared jnp)
+    locate_carry        — §4.4 carry-over boundary for streaming
+
+Driver-specific glue stays in the drivers: the cross-device prefix scans of
+``DistributedParser`` plug in via ``prefix_fn`` / ``chunk_offsets`` without
+this module knowing about meshes.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fields as fields_mod
+from repro.core import offsets as offsets_mod
+from repro.core import partition as partition_mod
+from repro.core import tagging as tagging_mod
+from repro.core import typeconv as typeconv_mod
+from repro.core.backends import ParseBackend
+from repro.core.dfa import RECORD_DELIM
+
+
+class ParseContext(NamedTuple):
+    """§3.1/§3.2 output: every chunk knows its context and its summaries."""
+
+    classes: jax.Array                    # (C, K) uint8 symbol classes
+    end_states: jax.Array                 # (C,) int32 — per-chunk end state
+    saw_invalid: jax.Array                # (C,) bool — invalid sink hit
+    summaries: offsets_mod.ChunkSummary   # per-chunk §3.2 scan elements
+
+
+class ColumnBatch(NamedTuple):
+    """§3.3 output: partitioned CSS plus its field index."""
+
+    css: jax.Array        # (N,) uint8 partitioned symbols
+    col_start: jax.Array  # (n_cols+1,) int32
+    col_count: jax.Array  # (n_cols+1,) int32
+    findex: fields_mod.FieldIndex
+
+
+def determine_contexts(
+    chunks: jax.Array,
+    cfg,
+    backend: ParseBackend,
+    initial_state: Optional[jax.Array] = None,
+    prefix_fn=None,
+) -> ParseContext:
+    """§3.1: transition vectors → composite scan → replay (+§3.2 summaries).
+
+    ``prefix_fn(vecs) -> (S,)`` supplies a cross-device exclusive composite
+    (the distributed parser's all-gather stitch) applied before the local
+    exclusive scan; ``initial_state`` overrides the DFA start state (the
+    streaming carry-over hook).
+    """
+    from repro.core import transition as tr
+
+    vecs = backend.chunk_vectors(chunks, cfg)
+    scanned = tr.exclusive_scan_vectors(vecs, use_matmul=cfg.use_matmul_scan)
+    if prefix_fn is not None:
+        prefix = prefix_fn(vecs)
+        scanned = tr.compose(jnp.broadcast_to(prefix, scanned.shape), scanned)
+    start = tr.start_states(scanned, cfg.dfa, initial_state=initial_state)
+    classes, end_states, saw_invalid, summaries = backend.replay_summaries(
+        chunks, start, cfg
+    )
+    return ParseContext(classes, end_states, saw_invalid, summaries)
+
+
+def identify_symbols(
+    ctx: ParseContext,
+    chunk_offsets: Optional[offsets_mod.ChunkOffsets] = None,
+) -> offsets_mod.SymbolIds:
+    """§3.2: per-symbol record/column ids from the chunk summaries.
+
+    ``chunk_offsets`` overrides the local exclusive scan with externally
+    stitched offsets (the distributed parser's cross-device prefixes).
+    """
+    if chunk_offsets is None:
+        chunk_offsets = offsets_mod.scan_chunk_offsets(ctx.summaries)
+    return offsets_mod.symbol_ids_from_chunks(ctx.classes, chunk_offsets)
+
+
+def build_columns(
+    raw_chunks: jax.Array,
+    classes: jax.Array,
+    record_id: jax.Array,
+    column_id: jax.Array,
+    cfg,
+) -> ColumnBatch:
+    """§3.2/§4.1 tagging → §3.3 stable partition → field index.
+
+    ``record_id`` is whatever the caller wants in the field index: global
+    ids for the single-device parser, shard-local ids for the distributed
+    one.
+    """
+    n_cols = cfg.schema.n_cols
+    flat_classes = classes.reshape(-1)
+
+    selected = None
+    if not all(c.selected for c in cfg.schema.columns):
+        selected = np.asarray([c.selected for c in cfg.schema.columns])
+    tagged = tagging_mod.tag_symbols(
+        raw_chunks, flat_classes, record_id, column_id, n_cols,
+        cfg.tagging, selected_mask=selected,
+    )
+
+    part = partition_mod.PARTITION_IMPLS[cfg.partition_impl](tagged.col_tag, n_cols)
+    if cfg.tagging == "tagged":
+        # delim_flag is structurally all-False in tagged mode: skip one
+        # N-sized gather+write (EXPERIMENTS.md §Perf parser iteration)
+        css, rec_sorted, col_sorted = partition_mod.apply_partition(
+            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag
+        )
+        findex = fields_mod.field_index_tagged(
+            col_sorted, rec_sorted, n_cols, cfg.max_records
+        )
+    else:
+        css, rec_sorted, col_sorted, flag_sorted = partition_mod.apply_partition(
+            part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag,
+            tagged.delim_flag,
+        )
+        findex = fields_mod.field_index_terminated(
+            flag_sorted, col_sorted, rec_sorted, part.col_start, n_cols,
+            cfg.max_records,
+        )
+    return ColumnBatch(css, part.col_start, part.col_count, findex)
+
+
+def convert_types(
+    css: jax.Array,
+    findex: fields_mod.FieldIndex,
+    cfg,
+    backend: ParseBackend,
+) -> Dict[str, typeconv_mod.Parsed]:
+    """§3.3 type conversion per selected column.
+
+    int32 columns route through the backend (the Pallas ``numparse`` kernel
+    on ``backend="pallas"``); other dtypes share the jnp reference parsers.
+    Invalid int values are normalised to 0 so backends agree bit-for-bit
+    (their Horner loops treat non-digit garbage differently, and garbage
+    values are meaningless anyway — ``valid`` gates them).
+    """
+    values: Dict[str, typeconv_mod.Parsed] = {}
+    for c, col in enumerate(cfg.schema.columns):
+        if not col.selected:
+            continue
+        off = findex.offset[c]
+        ln = findex.length[c]
+        if col.dtype == "int32":
+            p = backend.parse_int(css, off, ln, cfg)
+            values[col.name] = p._replace(value=jnp.where(p.valid, p.value, 0))
+        elif col.dtype == "float32":
+            values[col.name] = typeconv_mod.parse_float(css, off, ln, width=cfg.float_width)
+        elif col.dtype == "date":
+            values[col.name] = typeconv_mod.parse_date(css, off, ln)
+        else:
+            values[col.name] = typeconv_mod.parse_string_noop(css, off, ln)
+    return values
+
+
+def locate_carry(flat_classes: jax.Array) -> jax.Array:
+    """§4.4: byte position of the last record delimiter (−1 if none) — the
+    streaming carry-over boundary."""
+    pos = jnp.arange(flat_classes.shape[0], dtype=jnp.int32)
+    return jnp.max(jnp.where(flat_classes == RECORD_DELIM, pos, -1)).astype(jnp.int32)

@@ -64,8 +64,23 @@ class StreamingParser:
         raw = np.frombuffer(buf, np.uint8)
         out = np.full(self.capacity, PAD_BYTE, np.uint8)
         out[: raw.size] = raw
-        if final and raw.size and raw[-1] != self.parser.cfg.record_delim_byte:
-            out[raw.size] = self.parser.cfg.record_delim_byte
+        if final:
+            # Flush the unterminated tail record — but judge "unterminated"
+            # on the last *payload* byte: a PAD-only tail (trailing 0x00
+            # padding in the source) carries no record, and appending a
+            # delimiter after it would mint a spurious empty record.
+            payload = raw.size
+            while payload and raw[payload - 1] == PAD_BYTE:
+                payload -= 1
+            if payload and raw[payload - 1] != self.parser.cfg.record_delim_byte:
+                if raw.size >= self.capacity:
+                    # The carry consumed the slot reserved for the flush
+                    # delimiter (a single record filled the whole buffer).
+                    raise ValueError(
+                        f"record longer than capacity ({raw.size + 1} > "
+                        f"{self.capacity}); increase max_carry_bytes"
+                    )
+                out[raw.size] = self.parser.cfg.record_delim_byte
         return out.reshape(-1, k)
 
     def parse_stream(
@@ -78,7 +93,6 @@ class StreamingParser:
         """
         carry = b""
         it = iter(source)
-        pending = None  # (result, carry_len_if_final_known)
         buf = b""
         exhausted = False
         while True:
@@ -109,17 +123,21 @@ class StreamingParser:
                 carry = full  # no complete record in this partition
             else:
                 carry = full[last + 1:]
+            if final and carry:
+                # The stream is exhausted, so leftover carry is stale, not a
+                # pending record: either inert PAD/control bytes (a PAD-only
+                # tail — nothing left to parse), or an unterminated record
+                # that the appended delimiter could not close (malformed
+                # input, e.g. an unclosed quote; ``validation`` flags it).
+                # Drop it explicitly so stats and any caller inspecting the
+                # carry see the stream as fully consumed.
+                carry = b""
             self.stats.partitions += 1
             self.stats.bytes_in += len(take)
             self.stats.records += n_complete
             self.stats.max_carry = max(self.stats.max_carry, len(carry))
             yield result, n_complete
             if final:
-                if carry and last >= 0:
-                    # only PADs followed the final record delimiter; the
-                    # appended delimiter (``final=True``) already flushed the
-                    # tail record, so any remaining carry is stale.
-                    pass
                 break
 
     def parse_all(self, source: Iterable[bytes]):

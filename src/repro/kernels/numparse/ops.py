@@ -4,7 +4,10 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import typeconv as typeconv_mod
+from repro.core.backends import pad_to_block
 from repro.kernels.numparse import numparse
 
 
@@ -15,3 +18,27 @@ def parse_int_fields(field_bytes, lengths,
     return numparse.parse_int_fields(
         field_bytes, lengths, block_rows=block_rows, interpret=interpret
     )
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def parse_int_column(css, offset, length, width: int = 11,
+                     block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                     interpret: bool = True) -> typeconv_mod.Parsed:
+    """Field-index entry point: gather a column's field bytes out of the CSS
+    (XLA gather — TPU lanes cannot index HBM per-lane) and hand the dense
+    ``(R, W)`` matrix to the Pallas arithmetic kernel.
+
+    This is the kernel-backed equivalent of ``typeconv.parse_int`` and what
+    ``backend="pallas"`` routes int32 columns through; row counts that do not
+    divide the block are padded with zero-length fields and sliced off.
+    """
+    raw, _ = typeconv_mod.gather_field_bytes(css, offset, length, width)
+    br = min(block_rows, raw.shape[0])
+    padded, n = pad_to_block(raw, br, 0)
+    len_p, _ = pad_to_block(length.astype(jnp.int32), br, 0)
+    val, ok = numparse.parse_int_fields(
+        padded, len_p, block_rows=br, interpret=interpret
+    )
+    val, ok = val[:n], ok[:n]
+    empty = length == 0
+    return typeconv_mod.Parsed(val, ok & ~empty, empty)

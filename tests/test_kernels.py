@@ -158,3 +158,27 @@ def test_dfa_scan_replay_fused_summaries(rng, dfa_name):
     np.testing.assert_array_equal(np.asarray(summ[:, 0]), np.asarray(ref.rec_count))
     np.testing.assert_array_equal(np.asarray(summ[:, 1]), np.asarray(ref.col_tag))
     np.testing.assert_array_equal(np.asarray(summ[:, 2]), np.asarray(ref.col_off))
+
+
+@pytest.mark.parametrize("n_chunks", [96, 100])  # 100 % 32 != 0: pad path
+def test_dfa_scan_parse_contexts(rng, n_chunks):
+    """Fused §3.1+§3.2 entry == jnp pipeline + chunk_summaries, including
+    chunk counts that do not divide block_chunks."""
+    from repro.core import offsets as offs_mod
+    from repro.core.transition import transition_pipeline
+    from repro.kernels.dfa_scan import ops
+
+    dfa = DFAS["csv"]
+    alphabet = np.frombuffer(b',"\nabc', np.uint8)
+    chunks = jnp.asarray(
+        alphabet[rng.integers(0, len(alphabet), size=n_chunks * 32)]
+        .reshape(n_chunks, 32)
+    )
+    cls_k, ends_k, summ = ops.parse_contexts(chunks, dfa, block_chunks=32)
+    cls_j, ends_j, _ = transition_pipeline(chunks, dfa)
+    np.testing.assert_array_equal(np.asarray(cls_k), np.asarray(cls_j))
+    np.testing.assert_array_equal(np.asarray(ends_k), np.asarray(ends_j))
+    ref = offs_mod.chunk_summaries(cls_j)
+    np.testing.assert_array_equal(np.asarray(summ[:, 0]), np.asarray(ref.rec_count))
+    np.testing.assert_array_equal(np.asarray(summ[:, 1]), np.asarray(ref.col_tag))
+    np.testing.assert_array_equal(np.asarray(summ[:, 2]), np.asarray(ref.col_off))

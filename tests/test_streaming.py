@@ -76,6 +76,66 @@ def test_capacity_overflow_raises():
         list(sp.parse_stream(_source(data, 16)))
 
 
+def test_capacity_exact_fill_needs_flush_delimiter_raises():
+    """Regression: an unterminated record that exactly fills the buffer
+    leaves no room for the flush delimiter — must raise the graceful
+    capacity error, not an out-of-bounds write."""
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=Schema.of(("a", "str"),),
+                       max_records=4, chunk_size=16)
+    sp = StreamingParser(Parser(cfg), partition_bytes=32, max_carry_bytes=32)
+    data = b"y" * sp.capacity  # one delimiter-free record, exactly capacity
+    with pytest.raises(ValueError, match="record longer than capacity"):
+        list(sp.parse_stream(_source(data, 16)))
+
+
+def _small_parser(**kw):
+    cfg = ParserConfig(dfa=make_csv_dfa(),
+                       schema=Schema.of(("a", "int32"), ("b", "str")),
+                       max_records=16, chunk_size=16, **kw)
+    return Parser(cfg)
+
+
+def test_stream_pad_only_tail():
+    """Regression: a stream ending in a PAD-only tail (trailing 0x00 bytes
+    after the last record delimiter) must not mint a spurious empty record,
+    must drop the stale carry, and must terminate."""
+    data = b"1,aa\n2,bb\n" + b"\x00" * 8
+    sp = StreamingParser(_small_parser(), partition_bytes=256, max_carry_bytes=64)
+    parts = list(sp.parse_stream([data]))
+    assert len(parts) == 1
+    _, n_complete = parts[0]
+    assert n_complete == 2          # no empty third record from the PAD tail
+    assert sp.stats.records == 2
+    assert sp.stats.max_carry == 0  # stale PAD carry was dropped, not kept
+
+
+def test_stream_pad_only_final_partition():
+    """Same, but the PAD tail lands in its own final partition: the carry
+    from the previous partition is empty, the final partition is all PADs,
+    and the stream must end with zero extra records."""
+    sp = StreamingParser(_small_parser(), partition_bytes=10, max_carry_bytes=64)
+    parts = list(sp.parse_stream([b"1,aa\n2,bb\n", b"\x00" * 6]))
+    assert [n for _, n in parts] == [2, 0]
+    assert sp.stats.records == 2
+    assert sp.stats.max_carry == 0
+
+
+def test_stream_final_unterminated_quote_drops_stale_carry():
+    """A final partition whose tail is an unclosed quoted field: the last
+    raw byte is a record delimiter (inside quotes → DATA), so no delimiter
+    is appended and the tail record cannot be completed.  The stream must
+    still terminate with the stale carry dropped and validation flagging the
+    partition."""
+    data = b'1,aa\n2,"bb\n'
+    sp = StreamingParser(_small_parser(), partition_bytes=256, max_carry_bytes=64)
+    parts = list(sp.parse_stream([data]))
+    assert len(parts) == 1
+    result, n_complete = parts[0]
+    assert n_complete == 1  # only "1,aa"; the quoted tail never closes
+    assert not bool(result.validation.ok)  # ends mid-quote: not accepted
+    assert sp.stats.max_carry == 0
+
+
 def test_no_trailing_newline(rng):
     rows, data = random_csv_table(rng, 10, ("int32", "str"))
     data = data.rstrip(b"\n")
