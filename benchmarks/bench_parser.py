@@ -68,19 +68,30 @@ def fig11_tagging_modes():
 def backend_sweep(n_records=250):
     """reference vs pallas through the same jitted pipeline (small input:
     interpret-mode kernels are slow on CPU; the sweep is about keeping the
-    kernel path honest in the perf log, and flags any output divergence)."""
-    data = dataset("yelp", n_records)
-    results = {}
-    for backend in ("reference", "pallas"):
-        p = yelp_parser(max_records=1 << 12, backend=backend)
-        chunks = jnp.asarray(p.prepare(data))
-        dt, out = time_fn(p.parse_chunks, chunks, warmup=1, iters=2)
-        results[backend] = out
-        emit(f"backends/yelp/{backend}", dt * 1e6,
-             f"{gbps(len(data), dt):.3f}GB/s;records={int(out.validation.n_records)}")
-    same = np.array_equal(np.asarray(results["reference"].css),
-                          np.asarray(results["pallas"].css))
-    emit("backends/yelp/css_match", 0.0, f"identical={same}")
+    kernel path honest in the perf log, and flags any output divergence).
+
+    Two workloads: yelp (int/str-heavy — the DFA+partition path dominates)
+    and taxi (17 short numeric/temporal columns — float/date conversion
+    kernels dominate, the §3.3 kernel-completion datapoint)."""
+    for kind, mk, n in (("yelp", yelp_parser, n_records),
+                        ("taxi", taxi_parser, 4 * n_records)):
+        data = dataset(kind, n)
+        results = {}
+        for backend in ("reference", "pallas"):
+            p = mk(max_records=1 << 12, backend=backend)
+            chunks = jnp.asarray(p.prepare(data))
+            dt, out = time_fn(p.parse_chunks, chunks, warmup=1, iters=2)
+            results[backend] = out
+            emit(f"backends/{kind}/{backend}", dt * 1e6,
+                 f"{gbps(len(data), dt):.3f}GB/s;records={int(out.validation.n_records)}")
+        r, q = results["reference"], results["pallas"]
+        same = np.array_equal(np.asarray(r.css), np.asarray(q.css))
+        vals_same = all(
+            np.array_equal(np.asarray(getattr(r.values[c], f)),
+                           np.asarray(getattr(q.values[c], f)))
+            for c in r.values for f in ("value", "valid", "empty"))
+        emit(f"backends/{kind}/outputs_match", 0.0,
+             f"css={same};values={vals_same}")
 
 
 def fig12_partition_size():

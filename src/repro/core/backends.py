@@ -3,14 +3,18 @@
 Every driver — ``Parser``, ``DistributedParser``, ``StreamingParser`` — runs
 the *same* stage functions from :mod:`repro.core.stages`; what varies is who
 implements the byte-level hot loops.  A :class:`ParseBackend` bundles the
-three swappable stage implementations:
+swappable stage implementations:
 
   * ``chunk_vectors``     — §3.1 first pass: per-chunk state-transition
     vectors (the |S|-simultaneous-DFA sweep over every byte).
   * ``replay_summaries``  — §3.1 second pass fused with the §3.2 per-chunk
     offset summaries: class codes + end states + (rec_count, col_tag,
     col_off) triples in one sweep.
-  * ``parse_int``         — §3.3 int32 conversion over gathered field bytes.
+  * ``parse_field``       — §3.3 type conversion, one entry per schema dtype
+    (``int32`` / ``float32`` / ``date`` / ``str``), each mapping gathered
+    field bytes to a :class:`typeconv.Parsed`.  ``stages.convert_types``
+    dispatches *every* selected column through this table, so a backend that
+    kernelises a dtype needs no driver changes at all.
 
 Backends:
 
@@ -18,7 +22,9 @@ Backends:
     ``core.offsets`` / ``core.typeconv``); always available, the oracle.
   * ``pallas``    — the Pallas TPU kernels (``kernels.dfa_scan`` /
     ``kernels.numparse``).  The fused replay kernel makes the separate
-    ``chunk_summaries`` jnp pass disappear.  ``cfg.interpret`` /
+    ``chunk_summaries`` jnp pass disappear, and int32/float32/date columns
+    all convert inside ``numparse`` kernels (``str`` stays the shared no-op
+    — strings live in the CSS and need no arithmetic).  ``cfg.interpret`` /
     ``cfg.block_chunks`` carry the kernel knobs.
 
 Stage functions receive the ``ParserConfig`` duck-typed (``cfg.dfa``,
@@ -58,14 +64,14 @@ class ParseBackend:
       replay_summaries(chunks (C,K) u8, start (C,) i32, cfg)
           -> (classes (C,K) u8, end_states (C,) i32, saw_invalid (C,) bool,
               offsets.ChunkSummary)
-      parse_int(css (N,) u8, offset (R,) i32, length (R,) i32, cfg)
-          -> typeconv.Parsed
+      parse_field[dtype](css (N,) u8, offset (R,) i32, length (R,) i32, cfg)
+          -> typeconv.Parsed     for dtype in int32 | float32 | date | str
     """
 
     name: str
     chunk_vectors: Callable
     replay_summaries: Callable
-    parse_int: Callable
+    parse_field: Dict[str, Callable]
 
 
 BACKENDS: Dict[str, ParseBackend] = {}
@@ -131,11 +137,29 @@ def _ref_parse_int(css, offset, length, cfg) -> typeconv_mod.Parsed:
     return typeconv_mod.parse_int(css, offset, length, width=cfg.int_width)
 
 
+def _ref_parse_float(css, offset, length, cfg) -> typeconv_mod.Parsed:
+    return typeconv_mod.parse_float(css, offset, length, width=cfg.float_width)
+
+
+def _ref_parse_date(css, offset, length, cfg) -> typeconv_mod.Parsed:
+    return typeconv_mod.parse_date(css, offset, length)
+
+
+def _shared_parse_str(css, offset, length, cfg) -> typeconv_mod.Parsed:
+    # Strings stay in the CSS; both backends share the bookkeeping no-op.
+    return typeconv_mod.parse_string_noop(css, offset, length)
+
+
 REFERENCE = register_backend(ParseBackend(
     name="reference",
     chunk_vectors=_ref_chunk_vectors,
     replay_summaries=_ref_replay_summaries,
-    parse_int=_ref_parse_int,
+    parse_field={
+        "int32": _ref_parse_int,
+        "float32": _ref_parse_float,
+        "date": _ref_parse_date,
+        "str": _shared_parse_str,
+    },
 ))
 
 
@@ -185,9 +209,30 @@ def _pl_parse_int(css, offset, length, cfg) -> typeconv_mod.Parsed:
     )
 
 
+def _pl_parse_float(css, offset, length, cfg) -> typeconv_mod.Parsed:
+    from repro.kernels.numparse import ops as numparse_ops
+
+    return numparse_ops.parse_float_column(
+        css, offset, length, width=cfg.float_width, interpret=cfg.interpret
+    )
+
+
+def _pl_parse_date(css, offset, length, cfg) -> typeconv_mod.Parsed:
+    from repro.kernels.numparse import ops as numparse_ops
+
+    return numparse_ops.parse_date_column(
+        css, offset, length, interpret=cfg.interpret
+    )
+
+
 PALLAS = register_backend(ParseBackend(
     name="pallas",
     chunk_vectors=_pl_chunk_vectors,
     replay_summaries=_pl_replay_summaries,
-    parse_int=_pl_parse_int,
+    parse_field={
+        "int32": _pl_parse_int,
+        "float32": _pl_parse_float,
+        "date": _pl_parse_date,
+        "str": _shared_parse_str,
+    },
 ))

@@ -12,8 +12,8 @@ exactly these functions; the byte-level hot loops inside them come from the
     identify_symbols    — §3.2 record/column ids from the chunk summaries
     build_columns       — §3.2/§4.1 tagging → §3.3 stable partition →
                           field index
-    convert_types       — §3.3 type conversion (int32 routed through the
-                          backend; float/date/str shared jnp)
+    convert_types       — §3.3 type conversion (every dtype routed through
+                          the backend's per-dtype ``parse_field`` table)
     locate_carry        — §4.4 carry-over boundary for streaming
 
 Driver-specific glue stays in the drivers: the cross-device prefix scans of
@@ -151,11 +151,14 @@ def convert_types(
 ) -> Dict[str, typeconv_mod.Parsed]:
     """§3.3 type conversion per selected column.
 
-    int32 columns route through the backend (the Pallas ``numparse`` kernel
-    on ``backend="pallas"``); other dtypes share the jnp reference parsers.
-    Invalid int values are normalised to 0 so backends agree bit-for-bit
-    (their Horner loops treat non-digit garbage differently, and garbage
-    values are meaningless anyway — ``valid`` gates them).
+    *Every* column dispatches through ``backend.parse_field[dtype]`` — on
+    ``backend="pallas"`` int32/float32/date columns all run inside
+    ``kernels.numparse`` Pallas kernels; there is no per-dtype jnp fallback
+    on the hot path.  Invalid numeric values are normalised to 0 so backends
+    agree bit-for-bit (their Horner loops treat non-digit garbage
+    differently, and garbage values are meaningless anyway — ``valid`` gates
+    them).  ``str`` is exempt: its ``value`` is the field offset, which the
+    export path may use regardless of validity.
     """
     values: Dict[str, typeconv_mod.Parsed] = {}
     for c, col in enumerate(cfg.schema.columns):
@@ -163,15 +166,10 @@ def convert_types(
             continue
         off = findex.offset[c]
         ln = findex.length[c]
-        if col.dtype == "int32":
-            p = backend.parse_int(css, off, ln, cfg)
-            values[col.name] = p._replace(value=jnp.where(p.valid, p.value, 0))
-        elif col.dtype == "float32":
-            values[col.name] = typeconv_mod.parse_float(css, off, ln, width=cfg.float_width)
-        elif col.dtype == "date":
-            values[col.name] = typeconv_mod.parse_date(css, off, ln)
-        else:
-            values[col.name] = typeconv_mod.parse_string_noop(css, off, ln)
+        p = backend.parse_field[col.dtype](css, off, ln, cfg)
+        if col.dtype != "str":
+            p = p._replace(value=jnp.where(p.valid, p.value, jnp.zeros_like(p.value)))
+        values[col.name] = p
     return values
 
 

@@ -27,6 +27,11 @@ import jax.numpy as jnp
 
 _ZERO = ord("0")
 _POW10_I32 = jnp.array([10**k for k in range(10)], jnp.int32)
+#: Magnitude cap for int32 parses.  The cap is symmetric (|v| ≤ 2**31-1 for
+#: either sign) so sign handling stays branchless; ``-2147483648`` — the one
+#: value a sign-aware cap would additionally admit — is rejected as overflow.
+INT32_MAX = 2**31 - 1
+_I32_MAX = jnp.int32(INT32_MAX)
 
 
 class Parsed(NamedTuple):
@@ -61,7 +66,14 @@ def _sign_and_digits(bytes_w, mask):
 
 
 def parse_int(css, offset, length, width: int = 10) -> Parsed:
-    """Fixed-width integer parse (int32).  ``width`` counts digits + sign."""
+    """Fixed-width integer parse (int32).  ``width`` counts digits + sign.
+
+    ``valid`` requires the magnitude to fit int32 (|v| ≤ ``INT32_MAX``):
+    values like ``9999999999`` that would silently Horner-wrap instead clear
+    ``valid``.  The overflow test runs *before* each Horner step —
+    ``acc*10+d > MAX  ⇔  acc > (MAX-d)//10`` — so it never needs a wider
+    accumulator.
+    """
     raw, mask = gather_field_bytes(css, offset, length, width)
     sign, digits, dmask = _sign_and_digits(raw, mask)
     d = digits.astype(jnp.int32) - _ZERO
@@ -71,11 +83,18 @@ def parse_int(css, offset, length, width: int = 10) -> Parsed:
 
     d = jnp.where(dmask, d, 0)
     # Branchless Horner over the fixed width; masked lanes multiply by 1.
-    def step(acc, col):
+    def step(carry, col):
+        acc, ovf = carry
         dk, mk = col
-        return acc * jnp.where(mk, 10, 1) + dk, None
+        ovf |= mk & (acc > (_I32_MAX - dk) // 10)
+        return (acc * jnp.where(mk, 10, 1) + dk, ovf), None
 
-    acc, _ = jax.lax.scan(step, jnp.zeros(raw.shape[0], jnp.int32), (d.T, dmask.T))
+    (acc, ovf), _ = jax.lax.scan(
+        step,
+        (jnp.zeros(raw.shape[0], jnp.int32), jnp.zeros(raw.shape[0], bool)),
+        (d.T, dmask.T),
+    )
+    ok &= ~ovf
     empty = length == 0
     return Parsed(sign * acc, ok & ~empty, empty)
 
@@ -90,11 +109,20 @@ def parse_int_segmented(css: jax.Array, field_start: jax.Array, field_id: jax.Ar
       field_start: ``(N,) bool`` — True at each field's first byte.
       field_id: ``(N,) int32`` — field index per byte (``n_fields`` = drop).
 
-    The semigroup carries ``(reset, value, ndigits)``; a reset bit makes the
-    scan segmented while staying associative:
+    The semigroup carries ``(reset, value, ndigits, overflow)``; a reset bit
+    makes the scan segmented while staying associative:
         a ⊕ b = b                      if b.reset
-                (a.r, a.v·10^min(b.n,9) + b.v, a.n + b.n) otherwise
+                (a.r, a.v·10^min(b.n,9) + b.v, a.n + b.n, a.o|b.o|ovf(a,b))
     Field values are read at each field's *last* byte.
+
+    Overflow is detected exactly (``valid`` clears whenever a field's true
+    magnitude exceeds ``INT32_MAX``, matching :func:`parse_int`): while no
+    sub-window has overflowed, every carried value is exact, so the combine
+    test ``a.v > (MAX - b.v) // 10^b.n`` (or ``a.v > 0`` when ``b`` spans ≥10
+    digits) is exact too — and once set, the flag is sticky, which keeps the
+    operator associative.  Digit counts are otherwise uncapped: any number of
+    leading zeros is fine, which is what removes the old ≤9-digit cap and
+    reconciles this path with the ≤10-digit gather parser.
     """
     n = css.shape[0]
     d = css.astype(jnp.int32) - _ZERO
@@ -106,17 +134,22 @@ def parse_int_segmented(css: jax.Array, field_start: jax.Array, field_id: jax.Ar
     elem_v = jnp.where(is_digit, d, 0)
     elem_n = jnp.where(is_digit, 1, 0)
     elem_r = field_start
+    elem_o = jnp.zeros(n, bool)
 
     def op(a, b):
-        ar, av, an = a
-        br, bv, bn = b
+        ar, av, an, ao = a
+        br, bv, bn, bo = b
         scale = _POW10_I32[jnp.clip(bn, 0, 9)]
+        ovf = jnp.where(bn >= 10, av > 0, av > (_I32_MAX - bv) // scale)
         v = jnp.where(br, bv, av * scale + bv)
         nn = jnp.where(br, bn, an + bn)
+        o = jnp.where(br, bo, ao | bo | ovf)
         r = ar | br
-        return (r, v, nn)
+        return (r, v, nn, o)
 
-    _, val, ndig = jax.lax.associative_scan(op, (elem_r, elem_v, elem_n), axis=0)
+    _, val, ndig, ovf = jax.lax.associative_scan(
+        op, (elem_r, elem_v, elem_n, elem_o), axis=0
+    )
 
     # Per-byte validity: digits, or a legal leading sign.
     byte_ok = is_digit | sign_pos
@@ -131,9 +164,10 @@ def parse_int_segmented(css: jax.Array, field_start: jax.Array, field_id: jax.Ar
     last_c = jnp.clip(last, 0)
     value = val[last_c]
     ndigits = ndig[last_c]
+    overflowed = ovf[last_c]
     sign = jnp.where(is_minus[jnp.clip(jax.ops.segment_min(pos, field_id, num_segments=n_fields + 1)[:-1], 0)], -1, 1)
 
-    valid = has_bytes & ok_all & (ndigits > 0) & (ndigits <= 9)
+    valid = has_bytes & ok_all & (ndigits > 0) & ~overflowed
     return Parsed(sign * value, valid, ~has_bytes)
 
 
@@ -201,6 +235,18 @@ def parse_float(css, offset, length, width: int = 24) -> Parsed:
     return Parsed(value, ok & ~empty, empty)
 
 
+def _days_in_month(year, mon):
+    """Length of ``mon`` in ``year`` (proleptic Gregorian), branchless.
+
+    ``30 + (m + m//8) % 2`` reproduces the 31/30 alternation (with the
+    August flip) for every month except February, which gets the leap rule.
+    Only meaningful for ``mon`` in 1..12 — callers gate on that separately.
+    """
+    leap = ((year % 4 == 0) & (year % 100 != 0)) | (year % 400 == 0)
+    return jnp.where(mon == 2, 28 + leap.astype(jnp.int32),
+                     30 + (mon + mon // 8) % 2)
+
+
 def _days_from_civil(y, m, d):
     """Howard Hinnant's days-from-civil (proleptic Gregorian → days since epoch)."""
     y = y - (m <= 2)
@@ -213,7 +259,14 @@ def _days_from_civil(y, m, d):
 
 
 def parse_date(css, offset, length) -> Parsed:
-    """``YYYY-MM-DD[ HH:MM:SS]`` → unix epoch seconds (int32, valid to 2038)."""
+    """``YYYY-MM-DD[ HH:MM:SS]`` → unix epoch seconds (int32, valid to 2038).
+
+    Validation is semantic, not just structural: the day must exist in the
+    (proleptic Gregorian) month — day 31 of a 30-day month and Feb 29 of a
+    non-leap year are rejected — and the time section, when present, must
+    satisfy ``hh ≤ 23``, ``mm/ss ≤ 59`` with a ``' '`` or ISO-8601 ``'T'``
+    date/time separator.
+    """
     raw, mask = gather_field_bytes(css, offset, length, 19)
     d = raw.astype(jnp.int32) - _ZERO
 
@@ -236,8 +289,10 @@ def parse_date(css, offset, length) -> Parsed:
     ok &= (raw[:, 4] == ord("-")) & (raw[:, 7] == ord("-"))
     ok &= (length == 10) | (length == 19)
     time_ok = jnp.all(dd[:, time_lanes], axis=1) & (raw[:, 13] == ord(":")) & (raw[:, 16] == ord(":"))
+    time_ok &= (raw[:, 10] == ord(" ")) | (raw[:, 10] == ord("T"))  # ISO 8601 'T' too
     ok &= jnp.where(has_time, time_ok, True)
-    ok &= (mon >= 1) & (mon <= 12) & (day >= 1) & (day <= 31)
+    ok &= (mon >= 1) & (mon <= 12) & (day >= 1) & (day <= _days_in_month(year, mon))
+    ok &= jnp.where(has_time, (hh <= 23) & (mm <= 59) & (ss <= 59), True)
 
     secs = _days_from_civil(year, mon, day) * 86400 + hh * 3600 + mm * 60 + ss
     empty = length == 0

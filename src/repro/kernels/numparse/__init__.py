@@ -1,3 +1,7 @@
-from repro.kernels.numparse.ops import parse_int_fields
+from repro.kernels.numparse.ops import (
+    parse_date_fields,
+    parse_float_fields,
+    parse_int_fields,
+)
 
-__all__ = ["parse_int_fields"]
+__all__ = ["parse_int_fields", "parse_float_fields", "parse_date_fields"]

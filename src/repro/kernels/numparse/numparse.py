@@ -1,11 +1,22 @@
-"""Pallas TPU kernel for numeric field conversion (paper §3.3 type conversion).
+"""Pallas TPU kernels for typed field conversion (paper §3.3 type conversion).
 
 The memory-irregular step (gathering each field's bytes out of the CSS) is
-done by XLA's gather — TPU lanes cannot index HBM per-lane.  What the kernel
-owns is the arithmetic hot loop over the gathered ``(R, W)`` byte matrix:
-sign detection, digit validation, and branchless Horner accumulation, all on
-the VPU with the byte matrix VMEM-resident.  One grid step processes
+done by XLA's gather — TPU lanes cannot index HBM per-lane.  What the kernels
+own is the arithmetic hot loop over the gathered ``(R, W)`` byte matrix, all
+on the VPU with the byte matrix VMEM-resident.  One grid step processes
 ``block_rows`` fields; the width axis is statically unrolled (W ≤ ~24).
+
+Three kernels cover every non-string dtype the schema layer knows:
+
+  * ``parse_int_fields``   — sign detection, digit validation, branchless
+    Horner with pre-step overflow detection (``acc*10+d > MAX ⇔
+    acc > (MAX-d)//10`` — no wider accumulator needed).
+  * ``parse_float_fields`` — sign/mantissa/dot/exponent sections with
+    statically-unrolled masked Horner, mirroring ``typeconv.parse_float``
+    operation-for-operation so results are bit-identical.
+  * ``parse_date_fields``  — per-lane digit/separator validation (including
+    days-in-month and time-range semantics) + Hinnant days-from-civil,
+    mirroring ``typeconv.parse_date``.
 
 This is the thread-exclusive collaboration level of the paper; the skew-
 robust fallback (segmented-scan Horner over the raw CSS) lives in
@@ -17,9 +28,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK_ROWS = 512
-_ZERO = ord("0")
+from repro.core import typeconv as typeconv_mod
 
+DEFAULT_BLOCK_ROWS = 512
+#: Gather width for date fields — ``YYYY-MM-DD HH:MM:SS`` is exactly 19 bytes.
+DATE_WIDTH = 19
+_ZERO = ord("0")
+# Plain Python int: pallas kernels may not capture traced module constants.
+_I32_MAX = typeconv_mod.INT32_MAX
+
+
+# ---------------------------------------------------------------------------
+# int32
+# ---------------------------------------------------------------------------
 
 def _make_int_kernel(block_rows: int, width: int):
     def kernel(bytes_ref, len_ref, val_ref, ok_ref):
@@ -41,6 +62,8 @@ def _make_int_kernel(block_rows: int, width: int):
             is_digit = (d >= 0) & (d <= 9)
             bad |= live & ~is_digit
             use = live & is_digit
+            # magnitude overflow: acc*10+d would exceed INT32_MAX
+            bad |= use & (acc > (_I32_MAX - d) // 10)
             acc = jnp.where(use, acc * 10 + d, acc)
             ndig += use.astype(jnp.int32)
 
@@ -51,20 +74,137 @@ def _make_int_kernel(block_rows: int, width: int):
     return kernel
 
 
-def parse_int_fields(
-    field_bytes: jax.Array,
-    lengths: jax.Array,
-    *,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
-):
-    """``(R, W) uint8`` gathered field bytes + ``(R,) int32`` lengths →
-    ``(value (R,) int32, ok (R,) bool)``."""
+# ---------------------------------------------------------------------------
+# float32
+# ---------------------------------------------------------------------------
+
+def _make_float_kernel(block_rows: int, width: int):
+    br, w = block_rows, width
+
+    def kernel(bytes_ref, len_ref, val_ref, ok_ref):
+        raw = bytes_ref[...].astype(jnp.int32)      # (BR, W)
+        ln = len_ref[...][:, 0]                      # (BR,)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
+        m = lane < ln[:, None]
+        raw = jnp.where(m, raw, 0)
+
+        # Optional leading sign: shift the lane window left by one where
+        # present (same trick as typeconv._sign_and_digits).
+        first = raw[:, 0]
+        has_sign = (first == ord("-")) | (first == ord("+"))
+        sign = jnp.where(first == ord("-"), -1, 1).astype(jnp.int32)
+        shifted = jnp.concatenate(
+            [raw[:, 1:], jnp.zeros((br, 1), jnp.int32)], axis=1)
+        shifted_m = jnp.concatenate(
+            [m[:, 1:], jnp.zeros((br, 1), jnp.bool_)], axis=1)
+        b = jnp.where(has_sign[:, None], shifted, raw)
+        bm = jnp.where(has_sign[:, None], shifted_m, m)
+
+        is_dot = (b == ord(".")) & bm
+        is_e = ((b == ord("e")) | (b == ord("E"))) & bm
+        dot_pos = jnp.min(jnp.where(is_dot, lane, w), axis=1)   # (BR,)
+        e_pos = jnp.min(jnp.where(is_e, lane, w), axis=1)
+
+        d = b - _ZERO
+        is_digit = (d >= 0) & (d <= 9)
+
+        in_mant = bm & (lane < e_pos[:, None])
+        mant_digit = in_mant & ~is_dot
+        ok = (jnp.sum(is_dot, axis=1) <= 1) & ((dot_pos <= e_pos) | (dot_pos >= w))
+        ok &= jnp.all(is_digit | ~mant_digit, axis=1)
+        ok &= jnp.any(mant_digit & is_digit, axis=1)
+
+        # Mantissa Horner, statically unrolled over the width.
+        active = mant_digit & is_digit
+        dm = jnp.where(active, d, 0).astype(jnp.float32)
+        macc = jnp.zeros((br,), jnp.float32)
+        for k in range(w):
+            macc = jnp.where(active[:, k], macc * 10.0 + dm[:, k], macc)
+        frac_digits = jnp.sum(active & (lane > dot_pos[:, None]), axis=1)
+
+        # Exponent section.
+        after_e = bm & (lane > e_pos[:, None])
+        e_sign_lane = jnp.clip(e_pos + 1, 0, w - 1)
+        e_first = jnp.sum(jnp.where(lane == e_sign_lane[:, None], b, 0), axis=1)
+        has_e = e_pos < w
+        e_neg = has_e & (e_first == ord("-"))
+        e_signed = has_e & ((e_first == ord("-")) | (e_first == ord("+")))
+        exp_digit = after_e & (lane > (e_pos + jnp.where(e_signed, 1, 0))[:, None])
+        ok &= jnp.all(is_digit | ~exp_digit, axis=1)
+        ok &= ~has_e | jnp.any(exp_digit, axis=1)
+        de = jnp.where(exp_digit & is_digit, d, 0)
+        eacc = jnp.zeros((br,), jnp.int32)
+        for k in range(w):
+            eacc = jnp.where(exp_digit[:, k], eacc * 10 + de[:, k], eacc)
+
+        exp = jnp.where(e_neg, -eacc, eacc) - frac_digits
+        value = (sign.astype(jnp.float32) * macc *
+                 jnp.power(jnp.float32(10.0), exp.astype(jnp.float32)))
+        ok &= ln <= w
+
+        val_ref[...] = value[:, None]
+        ok_ref[...] = ok.astype(jnp.int32)[:, None]
+
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# date
+# ---------------------------------------------------------------------------
+
+def _make_date_kernel(block_rows: int):
+    br, w = block_rows, DATE_WIDTH
+
+    def kernel(bytes_ref, len_ref, val_ref, ok_ref):
+        raw = bytes_ref[...].astype(jnp.int32)      # (BR, 19)
+        ln = len_ref[...][:, 0]                      # (BR,)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
+        raw = jnp.where(lane < ln[:, None], raw, 0)
+        d = raw - _ZERO
+
+        def num(*lanes):
+            acc = jnp.zeros((br,), jnp.int32)
+            for k in lanes:
+                acc = acc * 10 + d[:, k]
+            return acc
+
+        year, mon, day = num(0, 1, 2, 3), num(5, 6), num(8, 9)
+        has_time = ln >= 19
+        hh = jnp.where(has_time, num(11, 12), 0)
+        mm = jnp.where(has_time, num(14, 15), 0)
+        ss = jnp.where(has_time, num(17, 18), 0)
+
+        dd = (d >= 0) & (d <= 9)
+        ok = (dd[:, 0] & dd[:, 1] & dd[:, 2] & dd[:, 3] &
+              dd[:, 5] & dd[:, 6] & dd[:, 8] & dd[:, 9])
+        ok &= (raw[:, 4] == ord("-")) & (raw[:, 7] == ord("-"))
+        ok &= (ln == 10) | (ln == 19)
+        time_ok = (dd[:, 11] & dd[:, 12] & dd[:, 14] & dd[:, 15] &
+                   dd[:, 17] & dd[:, 18] &
+                   (raw[:, 13] == ord(":")) & (raw[:, 16] == ord(":")) &
+                   ((raw[:, 10] == ord(" ")) | (raw[:, 10] == ord("T"))))
+        ok &= jnp.where(has_time, time_ok, True)
+        ok &= ((mon >= 1) & (mon <= 12) & (day >= 1) &
+               (day <= typeconv_mod._days_in_month(year, mon)))
+        ok &= jnp.where(has_time, (hh <= 23) & (mm <= 59) & (ss <= 59), True)
+
+        secs = (typeconv_mod._days_from_civil(year, mon, day) * 86400 +
+                hh * 3600 + mm * 60 + ss)
+        val_ref[...] = secs[:, None]
+        ok_ref[...] = ok.astype(jnp.int32)[:, None]
+
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# pallas_call plumbing (shared by all three kernels)
+# ---------------------------------------------------------------------------
+
+def _call_rowwise(kernel, field_bytes, lengths, block_rows, val_dtype, interpret):
     r, w = field_bytes.shape
     br = min(block_rows, r)
     if r % br:
         raise ValueError(f"rows {r} not a multiple of block_rows {br}")
-    kernel = _make_int_kernel(br, w)
     val, ok = pl.pallas_call(
         kernel,
         grid=(r // br,),
@@ -77,9 +217,58 @@ def parse_int_fields(
             pl.BlockSpec((br, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((r, 1), val_dtype),
             jax.ShapeDtypeStruct((r, 1), jnp.int32),
         ],
         interpret=interpret,
     )(field_bytes, lengths.astype(jnp.int32)[:, None])
     return val[:, 0], ok[:, 0].astype(bool)
+
+
+def parse_int_fields(
+    field_bytes: jax.Array,
+    lengths: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """``(R, W) uint8`` gathered field bytes + ``(R,) int32`` lengths →
+    ``(value (R,) int32, ok (R,) bool)``."""
+    r, w = field_bytes.shape
+    kernel = _make_int_kernel(min(block_rows, r), w)
+    return _call_rowwise(kernel, field_bytes, lengths, block_rows,
+                         jnp.int32, interpret)
+
+
+def parse_float_fields(
+    field_bytes: jax.Array,
+    lengths: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """``(R, W) uint8`` gathered field bytes + ``(R,) int32`` lengths →
+    ``(value (R,) float32, ok (R,) bool)`` — bit-identical to
+    ``typeconv.parse_float`` on every field."""
+    r, w = field_bytes.shape
+    kernel = _make_float_kernel(min(block_rows, r), w)
+    return _call_rowwise(kernel, field_bytes, lengths, block_rows,
+                         jnp.float32, interpret)
+
+
+def parse_date_fields(
+    field_bytes: jax.Array,
+    lengths: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """``(R, 19) uint8`` gathered field bytes + ``(R,) int32`` lengths →
+    ``(epoch_secs (R,) int32, ok (R,) bool)`` — bit-identical to
+    ``typeconv.parse_date`` on every field."""
+    r, w = field_bytes.shape
+    if w != DATE_WIDTH:
+        raise ValueError(f"date fields must be gathered at width {DATE_WIDTH}, got {w}")
+    kernel = _make_date_kernel(min(block_rows, r))
+    return _call_rowwise(kernel, field_bytes, lengths, block_rows,
+                         jnp.int32, interpret)

@@ -1,4 +1,12 @@
-"""Jit'd wrappers for the numparse kernel."""
+"""Jit'd wrappers for the numparse kernels.
+
+``parse_*_column`` are the field-index entry points ``backend="pallas"``
+routes typed columns through: gather a column's field bytes out of the CSS
+(XLA gather — TPU lanes cannot index HBM per-lane), pad the row count to the
+kernel block, and hand the dense ``(R, W)`` matrix to the Pallas arithmetic
+kernel.  Row counts that do not divide the block are padded with zero-length
+fields and sliced off.
+"""
 from __future__ import annotations
 
 import functools
@@ -20,25 +28,57 @@ def parse_int_fields(field_bytes, lengths,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
-def parse_int_column(css, offset, length, width: int = 11,
-                     block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
-                     interpret: bool = True) -> typeconv_mod.Parsed:
-    """Field-index entry point: gather a column's field bytes out of the CSS
-    (XLA gather — TPU lanes cannot index HBM per-lane) and hand the dense
-    ``(R, W)`` matrix to the Pallas arithmetic kernel.
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def parse_float_fields(field_bytes, lengths,
+                       block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                       interpret: bool = True):
+    return numparse.parse_float_fields(
+        field_bytes, lengths, block_rows=block_rows, interpret=interpret
+    )
 
-    This is the kernel-backed equivalent of ``typeconv.parse_int`` and what
-    ``backend="pallas"`` routes int32 columns through; row counts that do not
-    divide the block are padded with zero-length fields and sliced off.
-    """
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def parse_date_fields(field_bytes, lengths,
+                      block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                      interpret: bool = True):
+    return numparse.parse_date_fields(
+        field_bytes, lengths, block_rows=block_rows, interpret=interpret
+    )
+
+
+def _gather_and_run(kernel_fn, css, offset, length, width, block_rows, interpret):
     raw, _ = typeconv_mod.gather_field_bytes(css, offset, length, width)
     br = min(block_rows, raw.shape[0])
     padded, n = pad_to_block(raw, br, 0)
     len_p, _ = pad_to_block(length.astype(jnp.int32), br, 0)
-    val, ok = numparse.parse_int_fields(
-        padded, len_p, block_rows=br, interpret=interpret
-    )
+    val, ok = kernel_fn(padded, len_p, block_rows=br, interpret=interpret)
     val, ok = val[:n], ok[:n]
     empty = length == 0
     return typeconv_mod.Parsed(val, ok & ~empty, empty)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def parse_int_column(css, offset, length, width: int = 11,
+                     block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                     interpret: bool = True) -> typeconv_mod.Parsed:
+    """Kernel-backed equivalent of ``typeconv.parse_int``."""
+    return _gather_and_run(numparse.parse_int_fields, css, offset, length,
+                           width, block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def parse_float_column(css, offset, length, width: int = 24,
+                       block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                       interpret: bool = True) -> typeconv_mod.Parsed:
+    """Kernel-backed equivalent of ``typeconv.parse_float`` (bit-identical)."""
+    return _gather_and_run(numparse.parse_float_fields, css, offset, length,
+                           width, block_rows, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def parse_date_column(css, offset, length,
+                      block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                      interpret: bool = True) -> typeconv_mod.Parsed:
+    """Kernel-backed equivalent of ``typeconv.parse_date`` (bit-identical)."""
+    return _gather_and_run(numparse.parse_date_fields, css, offset, length,
+                           numparse.DATE_WIDTH, block_rows, interpret)

@@ -1,0 +1,65 @@
+"""Golden-corpus definitions + generator for tests/test_golden_corpus.py.
+
+Each corpus entry is a hand-written CSV under ``tests/data/`` plus a ``.npz``
+of the reference backend's exact columnar outputs (values, ``valid``/
+``empty`` masks, CSS, field index, record count).  The goldens pin the
+parser's observable §3.3 behaviour so refactors that silently change
+conversions — either backend — fail the regression test.
+
+Regenerate (only when a semantic change is *intended*):
+
+    PYTHONPATH=src python tests/data/make_goldens.py
+"""
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+
+DATA_DIR = pathlib.Path(__file__).resolve().parent
+
+GOLDEN_SCHEMAS = {
+    "mixed_basic": Schema.of(("i", "int32"), ("s", "str"),
+                             ("f", "float32"), ("d", "date")),
+    "numeric_edges": Schema.of(("a", "int32"), ("b", "int32"),
+                               ("x", "float32"), ("y", "float32")),
+    "date_edges": Schema.of(("d1", "date"), ("d2", "date"), ("note", "str")),
+}
+
+
+def build_parser(name: str, backend: str = "reference") -> Parser:
+    return Parser(ParserConfig(
+        dfa=make_csv_dfa(), schema=GOLDEN_SCHEMAS[name],
+        max_records=32, chunk_size=64, backend=backend,
+    ))
+
+
+def golden_arrays(name: str, backend: str = "reference"):
+    p = build_parser(name, backend)
+    res = p.parse((DATA_DIR / f"{name}.csv").read_bytes())
+    out = {
+        "css": np.asarray(res.css),
+        "col_start": np.asarray(res.col_start),
+        "col_count": np.asarray(res.col_count),
+        "field_offset": np.asarray(res.field_offset),
+        "field_length": np.asarray(res.field_length),
+        "n_records": np.asarray(res.validation.n_records),
+    }
+    for col, parsed in res.values.items():
+        out[f"{col}.value"] = np.asarray(parsed.value)
+        out[f"{col}.valid"] = np.asarray(parsed.valid)
+        out[f"{col}.empty"] = np.asarray(parsed.empty)
+    return out
+
+
+def generate():
+    for name in sorted(GOLDEN_SCHEMAS):
+        arrays = golden_arrays(name)
+        np.savez(DATA_DIR / f"{name}.npz", **arrays)
+        print(f"{name}: {int(arrays['n_records'])} records -> {name}.npz")
+
+
+if __name__ == "__main__":
+    generate()

@@ -23,16 +23,24 @@ DFAS = {
 }
 
 # Inputs exercise quotes/brackets where the DFA supports them, plus empty
-# fields, signed ints, and a trailing unterminated record.
+# fields, signed ints, exponent floats, valid/invalid dates (leap years,
+# day-in-month, time-of-day), overflowing ints, and a trailing unterminated
+# record.  Every dtype the schema layer knows appears in at least one schema
+# so no dtype can silently fall back to a non-backend path.
 INPUTS = {
-    "csv": b'1,"a,b",3.5\n-42,"he""llo",0.25\n,world,1e3\n7,x,\n',
-    "simple": b"1,aa\n-22,bb\n333,\n,dd\n",
+    "csv": (b'1,"a,b",3.5,2024-02-29\n'
+            b'-42,"he""llo",0.25,2023-02-29\n'
+            b',world,1e3,2024-04-31\n'
+            b'7,x,,2024-12-31 23:59:59\n'
+            b'2147483648,y,+.5,\n'
+            b'8,z,1e-3,2024-06-30\n'),
+    "simple": b"1,2.5\n-22,1e3\n333,junk\n,+.25\n9999999999,.\n",
     "log": b'h1 [01/Jan/2024] "GET /a b" 200\nh2 [02/Feb] "POST /c" -404\n',
 }
 
 SCHEMAS = {
-    "csv": Schema.of(("i", "int32"), ("s", "str"), ("f", "float32")),
-    "simple": Schema.of(("a", "int32"), ("b", "str")),
+    "csv": Schema.of(("i", "int32"), ("s", "str"), ("f", "float32"), ("d", "date")),
+    "simple": Schema.of(("a", "int32"), ("b", "float32")),
     "log": Schema.of(("host", "str"), ("ts", "str"), ("req", "str"), ("code", "int32")),
 }
 

@@ -1,0 +1,327 @@
+"""Differential fuzzing: both parser backends vs the Python csv/int/float
+oracle (the harness §3.3's kernel completion is hardened by).
+
+Random CSV tables — quoted fields, escaped quotes, embedded newlines, empty
+and missing fields, signed/overflowing ints, exponent floats, valid and
+invalid datetimes, unterminated tails — are parsed end-to-end on
+``backend="reference"`` and ``backend="pallas"`` and cross-checked
+field-by-field against Python's ``csv`` module + ``int()`` / ``float()`` /
+``datetime`` oracles.  The two backends must agree *bit-for-bit* (values,
+``valid``, ``empty``, CSS, field index); the reference backend must agree
+with the oracle up to documented semantics:
+
+  * int32   — valid ⇔ ``[+-]?digits``, field ≤ ``int_width`` bytes, and
+              |value| ≤ 2**31-1 (overflow clears ``valid``).
+  * float32 — valid is structural (mantissa/dot/exponent shape, ≤
+              ``float_width`` bytes); magnitude may round, overflow to ±inf,
+              or flush to zero in the subnormal range.
+  * date    — ``YYYY-MM-DD[ HH:MM:SS]`` (``T`` separator allowed) with real
+              civil-calendar validation; epoch seconds within int32.
+  * str     — bytes round-trip exactly (RFC 4180 unquoting/unescaping).
+
+Two profiles: the deterministic seed sweep below runs in CI; the deep sweep
+(more seeds, bigger tables) is ``-m slow``.  The hypothesis section runs
+only where hypothesis is installed (CI); its CI profile is derandomized so
+failures reproduce.
+"""
+import csv as pycsv
+import datetime as dt
+import io
+import os
+import re
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core import typeconv
+from repro.kernels.numparse import ops as k_ops
+from tests.test_backend_parity import _assert_results_equal
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without dev extras: numpy sweeps still run
+    HAVE_HYPOTHESIS = False
+
+INT32_MAX = 2**31 - 1
+DTYPES = ("int32", "str", "float32", "date")
+SCHEMA = Schema.of(("i", "int32"), ("s", "str"), ("f", "float32"), ("d", "date"))
+MAX_RECORDS = 64
+PAD_BYTES = 4096          # fixed byte capacity → one compiled shape per backend
+CI_SEEDS = range(5)
+DEEP_SEEDS = range(5, 25)
+
+INT_RE = re.compile(r"\A[+-]?[0-9]+\Z")
+FLOAT_RE = re.compile(
+    r"\A[+-]?(?=[0-9]|\.[0-9])[0-9]*(\.[0-9]*)?([eE][+-]?[0-9]+)?\Z")
+DATE_RE = re.compile(r"\A\d{4}-\d{2}-\d{2}([ T]\d{2}:\d{2}:\d{2})?\Z")
+
+
+# ---------------------------------------------------------------------------
+# oracles (documented parser semantics, in plain Python)
+# ---------------------------------------------------------------------------
+
+def oracle_int(s, width=11):
+    """Returns (valid, value or None)."""
+    if not INT_RE.match(s) or len(s) > width:
+        return False, None
+    v = int(s)
+    if abs(v) > INT32_MAX:
+        return False, None
+    return True, v
+
+
+def oracle_float_valid(s, width=24):
+    return bool(FLOAT_RE.match(s)) and len(s) <= width
+
+
+def oracle_date(s):
+    """Returns (valid, epoch_seconds or None)."""
+    if not DATE_RE.match(s):
+        return False, None
+    fmt = "%Y-%m-%d" if len(s) == 10 else f"%Y-%m-%d{s[10]}%H:%M:%S"
+    try:
+        d = dt.datetime.strptime(s, fmt).replace(tzinfo=dt.timezone.utc)
+    except ValueError:  # day/month/time out of civil range
+        return False, None
+    return True, int(d.timestamp())
+
+
+def check_float_value(s, got):
+    """Value check for oracle-valid float fields, skipping the documented
+    magnitude edges (overflow→inf asserted, subnormal flush skipped)."""
+    want = float(s)
+    if want == 0.0:
+        if "e" not in s.lower():
+            assert got == 0.0, (s, got)
+        return
+    if abs(want) > 3.5e38:
+        assert np.isinf(got) and (got > 0) == (want > 0), (s, got)
+        return
+    if abs(want) < 1e-30:  # pow-flush zone
+        return
+    np.testing.assert_allclose(got, np.float32(want), rtol=2e-5, err_msg=s)
+
+
+# ---------------------------------------------------------------------------
+# table generator
+# ---------------------------------------------------------------------------
+
+_STR_ALPHABET = list("abcXYZ 09_-+.;")
+_STR_SPICE = list('",\n')
+
+
+def _gen_field(rng, dtype):
+    r = rng.random()
+    if r < 0.12:
+        return ""  # empty / missing field
+    if dtype == "int32":
+        if r < 0.55:
+            return str(int(rng.integers(-10**9, 10**9)))
+        if r < 0.70:  # overflow boundary straddle
+            return str(int(rng.integers(2**31 - 3, 2**31 + 3)) *
+                       int(rng.choice([-1, 1])))
+        if r < 0.85:
+            return str(rng.choice(["9999999999", "12345678901", "0000000001",
+                                   "+42", "-0", "007", "2147483647"]))
+        return str(rng.choice(["x", "1x2", "--4", "+", "4 2", "1.5"]))
+    if dtype == "float32":
+        if r < 0.5:
+            return f"{float(rng.normal()) * 10 ** int(rng.integers(-6, 7)):.6g}"
+        if r < 0.7:
+            return f"{int(rng.integers(-9999, 9999))}e{int(rng.integers(-30, 31))}"
+        if r < 0.85:
+            return str(rng.choice(["+.5", "-.5", "3.", "1e39", "-1e39",
+                                   "1.5e+06", "0.25", "1E-3"]))
+        return str(rng.choice([".", "1e", "1e+", "1.2.3", "nan", "inf", "x.5"]))
+    if dtype == "date":
+        y, m, d = (int(rng.integers(1902, 2038)), int(rng.integers(1, 13)),
+                   int(rng.integers(1, 32)))
+        if r < 0.5:
+            return f"{y:04d}-{m:02d}-{d:02d}"
+        if r < 0.8:
+            hh, mm, ss = (int(rng.integers(0, 25)), int(rng.integers(0, 61)),
+                          int(rng.integers(0, 61)))
+            sep = " " if rng.random() < 0.7 else "T"
+            return f"{y:04d}-{m:02d}-{d:02d}{sep}{hh:02d}:{mm:02d}:{ss:02d}"
+        return str(rng.choice(["2024-02-30", "2023-02-29", "2024-04-31",
+                               "2024-1-01", "junk", "2024-01-01 00:00"]))
+    # str
+    n = int(rng.integers(0, 13))
+    alphabet = _STR_ALPHABET + (_STR_SPICE if rng.random() < 0.5 else [])
+    return "".join(str(c) for c in rng.choice(alphabet, size=n))
+
+
+def make_table(seed, n_rows):
+    rng = np.random.default_rng(seed)
+    rows = [[_gen_field(rng, d) for d in DTYPES] for _ in range(n_rows)]
+    buf = io.StringIO()
+    pycsv.writer(buf, quoting=pycsv.QUOTE_MINIMAL, lineterminator="\n").writerows(rows)
+    text = buf.getvalue()
+    if rng.random() < 0.4:
+        text = text[:-1]  # unterminated tail record
+    # generator/oracle self-check: csv must round-trip the exact fields
+    assert [r for r in pycsv.reader(io.StringIO(text))] == rows
+    return rows, text.encode()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end differential harness
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def parsers():
+    return {
+        be: Parser(ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA,
+                                max_records=MAX_RECORDS, chunk_size=64,
+                                backend=be))
+        for be in ("reference", "pallas")
+    }
+
+
+def _check_against_oracle(rows, res, parser):
+    assert int(res.validation.n_records) == len(rows)
+    assert bool(res.validation.ok)
+    arrow = parser.to_arrow(res)
+    for c, (name, dtype) in enumerate(zip("isfd", DTYPES)):
+        parsed = res.values[name]
+        valid = np.asarray(parsed.valid)
+        empty = np.asarray(parsed.empty)
+        values = np.asarray(parsed.value)
+        for r, row in enumerate(rows):
+            s = row[c]
+            assert bool(empty[r]) == (s == ""), (r, name, s)
+            if dtype == "int32":
+                want_ok, want = oracle_int(s)
+                assert bool(valid[r]) == want_ok, (r, s)
+                if want_ok:
+                    assert int(values[r]) == want, (r, s)
+            elif dtype == "float32":
+                want_ok = oracle_float_valid(s)
+                assert bool(valid[r]) == want_ok, (r, s)
+                if want_ok:
+                    check_float_value(s, values[r])
+            elif dtype == "date":
+                want_ok, want = oracle_date(s)
+                assert bool(valid[r]) == want_ok, (r, s)
+                if want_ok:
+                    assert int(values[r]) == want, (r, s)
+            else:  # str round-trips exactly through the CSS
+                a = arrow[name]
+                got = bytes(a["data"][a["offsets"][r]: a["offsets"][r + 1]])
+                assert got == s.encode(), (r, s, got)
+
+
+def _run_differential(parsers, seed, n_rows):
+    rows, data = make_table(seed, n_rows)
+    assert len(data) + 1 <= PAD_BYTES
+    chunks = jnp.asarray(parsers["reference"].prepare(data, pad_to=PAD_BYTES))
+    ref = parsers["reference"].parse_chunks(chunks)
+    pal = parsers["pallas"].parse_chunks(chunks)
+    _assert_results_equal(ref, pal, label=f"seed={seed}: ")  # bit-for-bit
+    _check_against_oracle(rows, ref, parsers["reference"])
+
+
+@pytest.mark.parametrize("seed", CI_SEEDS)
+def test_differential_fuzz_ci(parsers, seed):
+    """Deterministic CI profile: fixed seeds, fixed shapes (one compile)."""
+    _run_differential(parsers, seed, n_rows=24)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", DEEP_SEEDS)
+def test_differential_fuzz_deep(parsers, seed):
+    _run_differential(parsers, seed, n_rows=40)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis column-level differential (runs where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile(
+        "fuzz_ci", max_examples=25, derandomize=True, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile(
+        "fuzz_deep", max_examples=200, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("FUZZ_PROFILE", "fuzz_ci"))
+
+    N_FIELDS = 24      # fixed field count → fixed shapes → one compile
+    CSS_BYTES = 512
+
+    def _pack_fixed(strs):
+        """Pad to N_FIELDS fields / CSS_BYTES bytes so shapes stay constant."""
+        strs = (list(strs) + [""] * N_FIELDS)[:N_FIELDS]
+        blob = "".join(strs).encode()
+        lens = np.asarray([len(s) for s in strs], np.int32)
+        offs = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+        css = np.zeros(CSS_BYTES, np.uint8)
+        css[: len(blob)] = np.frombuffer(blob, np.uint8)
+        return jnp.asarray(css), jnp.asarray(offs), jnp.asarray(lens), strs
+
+    int_text = st.one_of(
+        st.integers(-10**12, 10**12).map(str),
+        st.from_regex(r"\A[+-]?[0-9]{1,12}\Z"),
+        st.sampled_from(["", "+", "x1", "1 2", "007", "2147483648"]),
+    )
+    float_text = st.one_of(
+        st.floats(allow_nan=False, allow_infinity=False, width=32,
+                  min_value=-1e30, max_value=1e30).map(lambda v: f"{v:.6g}"),
+        st.from_regex(r"\A[+-]?[0-9]{1,7}(\.[0-9]{0,6})?(e[+-]?[12]?[0-9])?\Z"),
+        st.sampled_from(["", ".", "+.5", "1e", "1e+", "3.", "1e39"]),
+    )
+    date_text = st.one_of(
+        st.tuples(st.integers(1902, 2037), st.integers(1, 13),
+                  st.integers(1, 31)).map(lambda t: "%04d-%02d-%02d" % t),
+        st.tuples(st.integers(1902, 2037), st.integers(1, 12),
+                  st.integers(1, 28), st.integers(0, 24), st.integers(0, 60),
+                  st.integers(0, 60)).map(
+                      lambda t: "%04d-%02d-%02d %02d:%02d:%02d" % t),
+        st.sampled_from(["", "junk", "2024-02-30", "2024-01-01T00:00:00"]),
+    )
+
+    @given(st.lists(int_text, min_size=1, max_size=N_FIELDS))
+    def test_hypothesis_int_differential(strs):
+        css, offs, lens, strs = _pack_fixed(strs)
+        ref = typeconv.parse_int(css, offs, lens, width=11)
+        pal = k_ops.parse_int_column(css, offs, lens, width=11)
+        np.testing.assert_array_equal(np.asarray(ref.valid), np.asarray(pal.valid))
+        ok = np.asarray(ref.valid)
+        np.testing.assert_array_equal(np.asarray(ref.value)[ok],
+                                      np.asarray(pal.value)[ok])
+        for s, v, got in zip(strs, ok, np.asarray(ref.value)):
+            want_ok, want = oracle_int(s)
+            assert bool(v) == want_ok, s
+            if want_ok:
+                assert int(got) == want, s
+
+    @given(st.lists(float_text, min_size=1, max_size=N_FIELDS))
+    def test_hypothesis_float_differential(strs):
+        css, offs, lens, strs = _pack_fixed(strs)
+        ref = typeconv.parse_float(css, offs, lens, width=24)
+        pal = k_ops.parse_float_column(css, offs, lens, width=24)
+        np.testing.assert_array_equal(np.asarray(ref.valid), np.asarray(pal.valid))
+        ok = np.asarray(ref.valid)
+        np.testing.assert_array_equal(np.asarray(ref.value)[ok],
+                                      np.asarray(pal.value)[ok])
+        for s, v, got in zip(strs, ok, np.asarray(ref.value)):
+            assert bool(v) == oracle_float_valid(s), s
+            if v:
+                check_float_value(s, got)
+
+    @given(st.lists(date_text, min_size=1, max_size=N_FIELDS))
+    def test_hypothesis_date_differential(strs):
+        css, offs, lens, strs = _pack_fixed(strs)
+        ref = typeconv.parse_date(css, offs, lens)
+        pal = k_ops.parse_date_column(css, offs, lens)
+        np.testing.assert_array_equal(np.asarray(ref.valid), np.asarray(pal.valid))
+        np.testing.assert_array_equal(np.asarray(ref.value), np.asarray(pal.value))
+        for s, v, got in zip(strs, np.asarray(ref.valid), np.asarray(ref.value)):
+            want_ok, want = oracle_date(s)
+            assert bool(v) == want_ok, s
+            if want_ok:
+                assert int(got) == want, s

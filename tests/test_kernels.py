@@ -96,6 +96,88 @@ def test_numparse_int(rng, width, rows, block):
             assert int(np.asarray(got_v)[i]) == int(s[:width]), (i, s)
 
 
+def _pack_rows(strs, width):
+    byts = np.zeros((len(strs), width), np.uint8)
+    lens = np.zeros((len(strs),), np.int32)
+    for i, s in enumerate(strs):
+        bs = s.encode()[:width]
+        byts[i, : len(bs)] = np.frombuffer(bs, np.uint8)
+        lens[i] = len(bs)
+    return jnp.asarray(byts), jnp.asarray(lens)
+
+
+def test_numparse_int_overflow(rng):
+    """Magnitude overflow clears ok on the kernel exactly like the jnp ref."""
+    from repro.kernels.numparse import ops as k_ops
+    from repro.kernels.numparse import ref as k_ref
+    strs = ["2147483647", "-2147483647", "2147483648", "-2147483648",
+            "9999999999", "0000000001", "00000000000042", "12345678901"]
+    strs += [str(int(v)) for v in rng.integers(2**31 - 100, 2**31 + 100, size=24)]
+    byts, lens = _pack_rows(strs, 16)
+    got_v, got_ok = k_ops.parse_int_fields(byts, lens, block_rows=len(strs))
+    want_v, want_ok = k_ref.parse_int_fields(byts, lens)
+    np.testing.assert_array_equal(np.asarray(got_ok), np.asarray(want_ok))
+    ok = np.asarray(got_ok)
+    np.testing.assert_array_equal(np.asarray(got_v)[ok], np.asarray(want_v)[ok])
+    for s, o in zip(strs, ok):
+        assert bool(o) == (abs(int(s)) <= 2**31 - 1), s
+
+
+@pytest.mark.parametrize("width", [16, 24])
+@pytest.mark.parametrize("rows,block", [(512, 128), (256, 256)])
+def test_numparse_float(rng, width, rows, block):
+    """Float kernel is bit-identical to the jnp reference — values AND ok."""
+    from repro.kernels.numparse import ops as k_ops
+    from repro.kernels.numparse import ref as k_ref
+    strs = []
+    for _ in range(rows):
+        u = rng.random()
+        if u < 0.45:
+            strs.append(f"{rng.normal() * 10.0 ** int(rng.integers(-6, 7)):.6g}")
+        elif u < 0.6:
+            strs.append(f"{rng.integers(-1000, 1000)}e{rng.integers(-40, 41)}")
+        elif u < 0.7:
+            strs.append(rng.choice([".", "+.5", "-.", "3.", "1e", "1e+", "1.2.3",
+                                    "1e39", "-1e-39", "+", ""]))
+        elif u < 0.8:
+            strs.append("x%.2f" % rng.random())
+        else:
+            strs.append(str(int(rng.integers(-10**9, 10**9))))
+    byts, lens = _pack_rows(strs, width)
+    got_v, got_ok = k_ops.parse_float_fields(byts, lens, block_rows=block)
+    want_v, want_ok = k_ref.parse_float_fields(byts, lens)
+    np.testing.assert_array_equal(np.asarray(got_ok), np.asarray(want_ok))
+    ok = np.asarray(got_ok)
+    # bit-for-bit on parsed values (inf from overflow included)
+    np.testing.assert_array_equal(np.asarray(got_v)[ok], np.asarray(want_v)[ok])
+
+
+@pytest.mark.parametrize("rows,block", [(512, 128), (100, 50)])
+def test_numparse_date(rng, rows, block):
+    """Date kernel is bit-identical to the jnp reference — values AND ok."""
+    from repro.kernels.numparse import ops as k_ops
+    from repro.kernels.numparse import ref as k_ref
+    strs = []
+    for _ in range(rows):
+        u = rng.random()
+        y, m, d = rng.integers(1902, 2038), rng.integers(1, 13), rng.integers(1, 32)
+        if u < 0.5:
+            strs.append(f"{y:04d}-{m:02d}-{d:02d}")
+        elif u < 0.8:
+            hh, mm, ss = rng.integers(0, 25), rng.integers(0, 61), rng.integers(0, 61)
+            sep = " " if rng.random() < 0.8 else "T"
+            strs.append(f"{y:04d}-{m:02d}-{d:02d}{sep}{hh:02d}:{mm:02d}:{ss:02d}")
+        else:
+            strs.append(rng.choice(["", "junk", "2024-1-01", "2024/01/01",
+                                    "2024-01-01x00:00:00", "2024-00-10"]))
+    byts, lens = _pack_rows(strs, 19)
+    got_v, got_ok = k_ops.parse_date_fields(byts, lens, block_rows=block)
+    want_v, want_ok = k_ref.parse_date_fields(byts, lens)
+    np.testing.assert_array_equal(np.asarray(got_ok), np.asarray(want_ok))
+    np.testing.assert_array_equal(np.asarray(got_v)[np.asarray(got_ok)],
+                                  np.asarray(want_v)[np.asarray(got_ok)])
+
+
 # ---------------------------------------------------------------------------
 # flashattn
 # ---------------------------------------------------------------------------

@@ -77,8 +77,29 @@ def test_segmented_equals_gather(values):
     gat = typeconv.parse_int(css, offs, lens, width=max(w, 1))
     both = np.asarray(seg.valid) & np.asarray(gat.valid)
     np.testing.assert_array_equal(np.asarray(seg.value)[both], np.asarray(gat.value)[both])
-    # segmented is valid whenever gather is (≤9 digits)
-    assert bool((np.asarray(seg.valid) | ~(np.asarray(gat.valid) & (np.asarray(lens) <= 9))).all())
+    # reconciled digit semantics: when the gather width covers every field
+    # (it does here), the two paths agree on validity exactly
+    np.testing.assert_array_equal(np.asarray(seg.valid), np.asarray(gat.valid))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-(10**13), 10**13), min_size=1, max_size=30))
+def test_int_overflow_clears_valid(values):
+    """|v| > INT32_MAX ⇒ valid=False on both int paths; within range the
+    parsed value round-trips — no silent Horner wrap anywhere."""
+    strs = [str(v) for v in values]
+    css, offs, lens, w = _pack(strs)
+    want_valid = np.asarray([abs(v) <= 2**31 - 1 for v in values])
+    gat = typeconv.parse_int(css, offs, lens, width=max(w, 1))
+    fid = jnp.asarray(np.repeat(np.arange(len(strs)), np.asarray(lens)), jnp.int32)
+    fstart = np.zeros(int(np.asarray(lens).sum()) or 1, bool)
+    fstart[np.asarray(offs)[: len(strs)]] = True
+    seg = typeconv.parse_int_segmented(css, jnp.asarray(fstart), fid, len(strs))
+    np.testing.assert_array_equal(np.asarray(gat.valid), want_valid)
+    np.testing.assert_array_equal(np.asarray(seg.valid), want_valid)
+    want = np.asarray([v for v in values if abs(v) <= 2**31 - 1], np.int64)
+    np.testing.assert_array_equal(np.asarray(gat.value)[want_valid], want)
+    np.testing.assert_array_equal(np.asarray(seg.value)[want_valid], want)
 
 
 @settings(max_examples=30, deadline=None)
