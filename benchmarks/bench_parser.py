@@ -6,21 +6,32 @@
   * fig12 — streaming partition-size sweep
   * fig13 — end-to-end vs baselines (python csv, numpy split, chunked-
             at-newline "Inst.Loading-style" constrained parser)
-  * backends — backend=reference vs backend=pallas through the unified
-            stage pipeline (core/stages.py), so the perf trajectory tracks
-            the kernel path.  NOTE: on this CPU container the Pallas
-            kernels run in interpret mode — the number is a correctness-
-            under-load datapoint, not the TPU projection.
+  * materialize_sweep — backend × partition-impl × fused/unfused typeconv
+            through the unified stage pipeline (core/stages.py), emitting
+            machine-readable ``BENCH_parser.json`` so the perf trajectory
+            of the backend-owned materialization path (partition kernel +
+            fused gather+convert) is tracked across PRs.  NOTE: on this
+            CPU container the Pallas kernels run in interpret mode — the
+            numbers are correctness-under-load datapoints and relative
+            fused-vs-unfused comparisons, not the TPU projection.
+
+Standalone CLI::
+
+    PYTHONPATH=src python -m benchmarks.bench_parser \
+        [--backend all] [--workload all] [--json BENCH_parser.json] [--records 250]
 
 All wall-clock on the CPU backend (this container's "device"); the TPU-
 projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
 """
 from __future__ import annotations
 
+import argparse
 import csv as pycsv
 import io
+import json
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,6 +40,26 @@ from repro.core.streaming import StreamingParser
 
 N_YELP = 2000    # ~1.3 MB
 N_TAXI = 8000    # ~0.7 MB
+
+#: materialize_sweep variants: label → (backend, partition_impl, fuse_typeconv).
+#: ``pallas/fused`` is the backend-default fused materialization path
+#: (partition "auto" + fused gather+convert kernels — what every driver
+#: runs); ``pallas/unfused`` is the pre-fusion pallas path (jnp scatter
+#: partition + XLA-gather typeconv) it must not regress against; the rest
+#: sweep the partition impls, the radix *kernel* included (on this
+#: interpret-mode container the kernel is a correctness datapoint — "auto"
+#: resolves to it only on real hardware).
+VARIANTS = {
+    "reference/scatter": ("reference", "scatter", True),
+    "reference/argsort": ("reference", "argsort", True),
+    "reference/scatter2": ("reference", "scatter2", True),
+    "pallas/fused": ("pallas", "auto", True),
+    "pallas/unfused": ("pallas", "scatter", False),
+    "pallas/kernel+fused": ("pallas", "kernel", True),
+    "pallas/scatter+fused": ("pallas", "scatter", True),
+    "pallas/argsort+fused": ("pallas", "argsort", True),
+    "pallas/scatter2+fused": ("pallas", "scatter2", True),
+}
 
 
 def fig9_chunk_size():
@@ -65,33 +96,142 @@ def fig11_tagging_modes():
     emit("fig11/skewed/tagged", dt * 1e6, f"{gbps(len(skew), dt):.3f}GB/s")
 
 
-def backend_sweep(n_records=250):
-    """reference vs pallas through the same jitted pipeline (small input:
-    interpret-mode kernels are slow on CPU; the sweep is about keeping the
-    kernel path honest in the perf log, and flags any output divergence).
+def _materialize_only(parsers, rounds=8):
+    """Best-of interleaved timing of ``stages.materialize`` alone, per
+    variant, from shared §3.1/§3.2 outputs (identical across variants)."""
+    from repro.core import backends as backends_mod
+    from repro.core import stages as stages_mod
+
+    p0, chunks0 = next(iter(parsers.values()))
+    be0 = backends_mod.get_backend(p0.cfg.backend)
+
+    @jax.jit
+    def upstream(chunks):
+        ctx = stages_mod.determine_contexts(chunks, p0.cfg, be0)
+        ids = stages_mod.identify_symbols(ctx)
+        return ctx.classes, ids.record_id, ids.column_id
+
+    classes, rec_id, col_id = (jnp.asarray(x) for x in upstream(chunks0))
+
+    fns = {}
+    for label, (p, chunks) in parsers.items():
+        be = backends_mod.get_backend(p.cfg.backend)
+        plan = stages_mod.plan_materialize(p.cfg, be)
+        fn = jax.jit(lambda ch, cl, r, c, plan=plan, cfg=p.cfg, be=be:
+                     stages_mod.materialize(ch, cl, r, c, plan, cfg, be))
+        for _ in range(2):  # compile + warm
+            jax.block_until_ready(fn(chunks, classes, rec_id, col_id))
+        fns[label] = (fn, chunks)
+    best = {label: float("inf") for label in fns}
+    for _ in range(rounds):
+        for label, (fn, chunks) in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(chunks, classes, rec_id, col_id))
+            best[label] = min(best[label], time.perf_counter() - t0)
+    return best
+
+
+def materialize_sweep(n_records=250, backends=("reference", "pallas"),
+                      workloads=("yelp", "taxi"), json_path="BENCH_parser.json"):
+    """Backend × partition-impl × fused/unfused sweep through the same
+    jitted pipeline, emitting machine-readable ``BENCH_parser.json``.
+
+    Small inputs: interpret-mode kernels are slow on CPU; the sweep is about
+    keeping the kernel path honest in the perf log, flagging output
+    divergence, and pinning the fused-vs-unfused pallas comparison the
+    materialization refactor is accountable for.
 
     Two workloads: yelp (int/str-heavy — the DFA+partition path dominates)
     and taxi (17 short numeric/temporal columns — float/date conversion
     kernels dominate, the §3.3 kernel-completion datapoint)."""
+    from repro.core import backends as backends_mod
+    from repro.core import stages as stages_mod
+
+    report = {"meta": {"interpret": True, "n_records_base": n_records},
+              "workloads": {}}
     for kind, mk, n in (("yelp", yelp_parser, n_records),
                         ("taxi", taxi_parser, 4 * n_records)):
+        if kind not in workloads:
+            continue
         data = dataset(kind, n)
-        results = {}
-        for backend in ("reference", "pallas"):
-            p = mk(max_records=1 << 12, backend=backend)
+        entry = {"n_records": n, "bytes": len(data), "variants": {}}
+        results, parsers, best = {}, {}, {}
+        for label, (backend, impl, fuse) in VARIANTS.items():
+            if backend not in backends:
+                continue
+            p = mk(max_records=1 << 12, backend=backend, partition_impl=impl,
+                   fuse_typeconv=fuse)
             chunks = jnp.asarray(p.prepare(data))
-            dt, out = time_fn(p.parse_chunks, chunks, warmup=1, iters=2)
-            results[backend] = out
-            emit(f"backends/{kind}/{backend}", dt * 1e6,
+            for _ in range(2):  # compile + warm
+                jax.block_until_ready(p.parse_chunks(chunks))
+            parsers[label] = (p, chunks)
+            best[label] = float("inf")
+        # Round-robin best-of timing: shared-host noise arrives in bursts
+        # long enough to swallow whole per-variant runs, so interleave the
+        # variants and keep each one's best round.
+        for _ in range(6):
+            for label, (p, chunks) in parsers.items():
+                t0 = time.perf_counter()
+                out = p.parse_chunks(chunks)
+                jax.block_until_ready(out)
+                best[label] = min(best[label], time.perf_counter() - t0)
+                results[label] = out
+        for label, (p, chunks) in parsers.items():
+            dt, out = best[label], results[label]
+            plan = stages_mod.plan_materialize(
+                p.cfg, backends_mod.get_backend(p.cfg.backend))
+            entry["variants"][label] = {
+                "us_per_call": dt * 1e6,
+                "gbps": gbps(len(data), dt),
+                "records": int(out.validation.n_records),
+                "partition_impl": plan.partition_impl,
+                "fuse_typeconv": p.cfg.fuse_typeconv,
+            }
+            emit(f"materialize/{kind}/{label}", dt * 1e6,
                  f"{gbps(len(data), dt):.3f}GB/s;records={int(out.validation.n_records)}")
-        r, q = results["reference"], results["pallas"]
-        same = np.array_equal(np.asarray(r.css), np.asarray(q.css))
-        vals_same = all(
-            np.array_equal(np.asarray(getattr(r.values[c], f)),
-                           np.asarray(getattr(q.values[c], f)))
-            for c in r.values for f in ("value", "valid", "empty"))
-        emit(f"backends/{kind}/outputs_match", 0.0,
-             f"css={same};values={vals_same}")
+
+        # Every variant must be bit-identical (stable partition + shared
+        # arithmetic make this exact, not a tolerance check).
+        labels = sorted(results)
+        if labels:
+            base = results[labels[0]]
+            same = all(
+                np.array_equal(np.asarray(base.css), np.asarray(results[l].css))
+                and all(
+                    np.array_equal(np.asarray(getattr(base.values[c], f)),
+                                   np.asarray(getattr(results[l].values[c], f)))
+                    for c in base.values for f in ("value", "valid", "empty"))
+                for l in labels[1:])
+            entry["outputs_match"] = bool(same)
+            emit(f"materialize/{kind}/outputs_match", 0.0, f"all={same}")
+
+        # Materialization-only timing (tagging → partition → field index →
+        # typeconv, jitted in isolation): the §3.1/§3.2 DFA stage is
+        # identical across variants and dominates the e2e numbers above, so
+        # the fused-vs-unfused accountability metric is scoped to the stage
+        # this refactor actually owns.
+        if parsers:
+            mat_best = _materialize_only(parsers)
+            for label, dt in mat_best.items():
+                entry["variants"][label]["materialize_us"] = dt * 1e6
+                emit(f"materialize_only/{kind}/{label}", dt * 1e6, "")
+
+        fused, unfused = "pallas/fused", "pallas/unfused"
+        if fused in entry["variants"] and unfused in entry["variants"]:
+            tf = entry["variants"][fused]["materialize_us"]
+            tu = entry["variants"][unfused]["materialize_us"]
+            entry["fused_vs_unfused"] = {
+                "speedup": tu / tf,
+                "no_slower": bool(tf <= tu * 1.05),  # 5% timing-noise margin
+            }
+            emit(f"materialize/{kind}/fused_speedup", 0.0, f"{tu / tf:.3f}x")
+        report["workloads"][kind] = entry
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return report
 
 
 def fig12_partition_size():
@@ -185,6 +325,37 @@ def run():
     fig9_chunk_size()
     fig10_input_size()
     fig11_tagging_modes()
-    backend_sweep()
+    materialize_sweep()
     fig12_partition_size()
     fig13_end_to_end()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="all",
+                    choices=["all", "reference", "pallas"])
+    ap.add_argument("--workload", default="all",
+                    choices=["all", "yelp", "taxi"])
+    ap.add_argument("--json", default="BENCH_parser.json", metavar="PATH",
+                    help="machine-readable sweep output ('' to skip)")
+    ap.add_argument("--records", type=int, default=250,
+                    help="yelp record count (taxi runs 4x this)")
+    ap.add_argument("--figs", action="store_true",
+                    help="also run the paper-figure suites (9-13)")
+    args = ap.parse_args(argv)
+
+    backends = ("reference", "pallas") if args.backend == "all" else (args.backend,)
+    workloads = ("yelp", "taxi") if args.workload == "all" else (args.workload,)
+    print("name,us_per_call,derived")
+    materialize_sweep(n_records=args.records, backends=backends,
+                      workloads=workloads, json_path=args.json)
+    if args.figs:
+        fig9_chunk_size()
+        fig10_input_size()
+        fig11_tagging_modes()
+        fig12_partition_size()
+        fig13_end_to_end()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,20 @@
 """Quickstart: parse RFC4180 CSV (quotes, embedded delimiters, comments)
 on-device with ParPaRaw and read back Arrow-layout columns.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend pallas]
+
+``--backend pallas`` runs the Pallas kernel path (DFA-scan, radix partition
+and fused gather+convert kernels, in interpret mode on CPU hosts) instead
+of the jnp reference — the outputs are bit-identical.
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core import Parser, ParserConfig, Schema, available_backends, make_csv_dfa
 
 CSV = (
     b'# inventory export 2026-07-15\n'
@@ -19,16 +24,26 @@ CSV = (
 )
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="reference",
+                    choices=available_backends())
+    args = ap.parse_args()
+
     schema = Schema.of(("id", "int32"), ("name", "str"),
                        ("price", "float32"), ("updated", "date"))
     parser = Parser(ParserConfig(
         dfa=make_csv_dfa(comment=b"#"),   # line comments — beyond quote-parity tricks
         schema=schema,
         max_records=16,
+        backend=args.backend,
+        # pin the radix partition kernel so the example (and the CI smoke
+        # job) exercises it — interpret-mode "auto" picks the jnp pass
+        partition_impl="kernel" if args.backend == "pallas" else "auto",
     ))
     result = parser.parse(CSV)
     assert bool(result.validation.ok), "input should validate"
     n = int(result.validation.n_records)
+    print(f"backend: {args.backend}")
     print(f"records: {n}  (comment line produced none)")
 
     arrow = parser.to_arrow(result)

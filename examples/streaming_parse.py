@@ -3,6 +3,12 @@ the device double-buffered, incomplete trailing records carry over, and
 throughput statistics are reported.
 
     PYTHONPATH=src python examples/streaming_parse.py [--records 20000]
+        [--backend pallas]
+
+``--backend pallas`` streams every partition through the Pallas kernel path
+(DFA-scan, radix partition and fused gather+convert kernels; interpret mode
+on CPU hosts, so expect it slower here — the point is exercising the kernel
+pipeline end to end, bit-identically to the reference).
 """
 import argparse
 import sys
@@ -12,7 +18,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core import Parser, ParserConfig, Schema, available_backends, make_csv_dfa
 from repro.core.streaming import StreamingParser
 from repro.data import synth
 
@@ -21,16 +27,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--records", type=int, default=20000)
     ap.add_argument("--partition-kib", type=int, default=512)
+    ap.add_argument("--backend", default="reference",
+                    choices=available_backends())
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     data = synth.yelp_like(rng, args.records)
     print(f"dataset: {len(data)/1e6:.1f} MB, {args.records} yelp-like records "
           f"(quoted text with embedded delimiters)")
+    print(f"backend: {args.backend}")
 
     parser = Parser(ParserConfig(
         dfa=make_csv_dfa(), schema=Schema.of(*synth.YELP_SCHEMA),
-        max_records=1 << 14, chunk_size=64,
+        max_records=1 << 14, chunk_size=64, backend=args.backend,
+        # pin the radix partition kernel so the example (and the CI smoke
+        # job) exercises it — interpret-mode "auto" picks the jnp pass
+        partition_impl="kernel" if args.backend == "pallas" else "auto",
     ))
     sp = StreamingParser(parser, args.partition_kib * 1024, max_carry_bytes=1 << 16)
 

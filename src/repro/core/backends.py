@@ -10,21 +10,35 @@ swappable stage implementations:
   * ``replay_summaries``  — §3.1 second pass fused with the §3.2 per-chunk
     offset summaries: class codes + end states + (rec_count, col_tag,
     col_off) triples in one sweep.
+  * ``partition``         — §3.3 stable partition of the tagged symbol
+    stream by column tag.  Receives the *resolved* ``partition_impl``
+    (``stages.plan_materialize`` maps ``"auto"`` to the backend's
+    ``default_partition_impl``; ``partition_impls`` lists what the backend
+    accepts).
   * ``parse_field``       — §3.3 type conversion, one entry per schema dtype
-    (``int32`` / ``float32`` / ``date`` / ``str``), each mapping gathered
-    field bytes to a :class:`typeconv.Parsed`.  ``stages.convert_types``
-    dispatches *every* selected column through this table, so a backend that
-    kernelises a dtype needs no driver changes at all.
+    (``int32`` / ``float32`` / ``date`` / ``str``), each mapping
+    ``(css, offset, length)`` to a :class:`typeconv.Parsed`.
+    ``stages.materialize`` dispatches *every* selected column through this
+    table, so a backend that kernelises a dtype needs no driver changes at
+    all.
 
 Backends:
 
   * ``reference`` — the pure-jnp path (``core.transition`` /
-    ``core.offsets`` / ``core.typeconv``); always available, the oracle.
+    ``core.offsets`` / ``core.partition`` / ``core.typeconv``); always
+    available, the oracle.
   * ``pallas``    — the Pallas TPU kernels (``kernels.dfa_scan`` /
-    ``kernels.numparse``).  The fused replay kernel makes the separate
-    ``chunk_summaries`` jnp pass disappear, and int32/float32/date columns
-    all convert inside ``numparse`` kernels (``str`` stays the shared no-op
-    — strings live in the CSS and need no arithmetic).  ``cfg.interpret`` /
+    ``kernels.partition`` / ``kernels.numparse``).  The fused replay kernel
+    makes the separate ``chunk_summaries`` jnp pass disappear; the
+    partition defaults to the single-pass radix kernel on real hardware
+    (``partition_impl="auto"`` → ``"kernel"``; under ``interpret=True`` it
+    resolves to the jit-fused jnp radix pass, with the kernel selectable
+    explicitly); and int32/float32/date columns convert
+    inside *fused gather+convert* ``numparse`` kernels that index the CSS
+    in-kernel — no XLA ``take``/gather between the field index and
+    conversion (``cfg.fuse_typeconv=False`` restores the unfused
+    gather+kernel path for comparison; ``str`` stays the shared no-op —
+    strings live in the CSS and need no arithmetic).  ``cfg.interpret`` /
     ``cfg.block_chunks`` carry the kernel knobs.
 
 Stage functions receive the ``ParserConfig`` duck-typed (``cfg.dfa``,
@@ -45,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import offsets as offsets_mod
+from repro.core import partition as partition_mod
 from repro.core import transition as tr
 from repro.core import typeconv as typeconv_mod
 from repro.core.dfa import PAD_BYTE
@@ -64,14 +79,23 @@ class ParseBackend:
       replay_summaries(chunks (C,K) u8, start (C,) i32, cfg)
           -> (classes (C,K) u8, end_states (C,) i32, saw_invalid (C,) bool,
               offsets.ChunkSummary)
+      partition(col_tag (N,) i32, n_cols, impl: str, cfg)
+          -> partition.Partitioned      for impl in ``partition_impls``
       parse_field[dtype](css (N,) u8, offset (R,) i32, length (R,) i32, cfg)
           -> typeconv.Parsed     for dtype in int32 | float32 | date | str
+
+    ``partition_impls`` / ``default_partition_impl`` are static metadata the
+    planning layer uses to resolve ``ParserConfig.partition_impl="auto"``
+    and to fail fast on impls the backend does not implement.
     """
 
     name: str
     chunk_vectors: Callable
     replay_summaries: Callable
+    partition: Callable
     parse_field: Dict[str, Callable]
+    partition_impls: Tuple[str, ...]
+    default_partition_impl: Callable  # (cfg) -> impl name ("auto" resolution)
 
 
 BACKENDS: Dict[str, ParseBackend] = {}
@@ -133,6 +157,10 @@ def _ref_replay_summaries(chunks: jax.Array, start: jax.Array, cfg):
     return classes, end_states, saw_invalid, summaries
 
 
+def _jnp_partition(col_tag, n_cols, impl, cfg) -> partition_mod.Partitioned:
+    return partition_mod.PARTITION_IMPLS[impl](col_tag, n_cols)
+
+
 def _ref_parse_int(css, offset, length, cfg) -> typeconv_mod.Parsed:
     return typeconv_mod.parse_int(css, offset, length, width=cfg.int_width)
 
@@ -154,17 +182,20 @@ REFERENCE = register_backend(ParseBackend(
     name="reference",
     chunk_vectors=_ref_chunk_vectors,
     replay_summaries=_ref_replay_summaries,
+    partition=_jnp_partition,
     parse_field={
         "int32": _ref_parse_int,
         "float32": _ref_parse_float,
         "date": _ref_parse_date,
         "str": _shared_parse_str,
     },
+    partition_impls=tuple(sorted(partition_mod.PARTITION_IMPLS)),
+    default_partition_impl=lambda cfg: "scatter",
 ))
 
 
 # ---------------------------------------------------------------------------
-# pallas backend — kernels.dfa_scan + kernels.numparse
+# pallas backend — kernels.dfa_scan + kernels.partition + kernels.numparse
 # ---------------------------------------------------------------------------
 
 def _block_chunks(cfg, c: int) -> int:
@@ -201,38 +232,60 @@ def _pl_replay_summaries(chunks: jax.Array, start: jax.Array, cfg):
     return classes, end_states, _saw_invalid(end_states, cfg.dfa), summaries
 
 
+def _pl_partition(col_tag, n_cols, impl, cfg) -> partition_mod.Partitioned:
+    if impl != "kernel":  # explicit jnp impls stay available for comparison
+        return partition_mod.PARTITION_IMPLS[impl](col_tag, n_cols)
+    from repro.kernels.partition import ops as partition_ops
+
+    return partition_ops.partition_tags(
+        col_tag, n_cols, interpret=cfg.interpret
+    )
+
+
+def _fuse(cfg) -> bool:
+    return getattr(cfg, "fuse_typeconv", True)
+
+
 def _pl_parse_int(css, offset, length, cfg) -> typeconv_mod.Parsed:
     from repro.kernels.numparse import ops as numparse_ops
 
-    return numparse_ops.parse_int_column(
-        css, offset, length, width=cfg.int_width, interpret=cfg.interpret
-    )
+    fn = (numparse_ops.parse_int_column_fused if _fuse(cfg)
+          else numparse_ops.parse_int_column)
+    return fn(css, offset, length, width=cfg.int_width, interpret=cfg.interpret)
 
 
 def _pl_parse_float(css, offset, length, cfg) -> typeconv_mod.Parsed:
     from repro.kernels.numparse import ops as numparse_ops
 
-    return numparse_ops.parse_float_column(
-        css, offset, length, width=cfg.float_width, interpret=cfg.interpret
-    )
+    fn = (numparse_ops.parse_float_column_fused if _fuse(cfg)
+          else numparse_ops.parse_float_column)
+    return fn(css, offset, length, width=cfg.float_width, interpret=cfg.interpret)
 
 
 def _pl_parse_date(css, offset, length, cfg) -> typeconv_mod.Parsed:
     from repro.kernels.numparse import ops as numparse_ops
 
-    return numparse_ops.parse_date_column(
-        css, offset, length, interpret=cfg.interpret
-    )
+    fn = (numparse_ops.parse_date_column_fused if _fuse(cfg)
+          else numparse_ops.parse_date_column)
+    return fn(css, offset, length, interpret=cfg.interpret)
 
 
 PALLAS = register_backend(ParseBackend(
     name="pallas",
     chunk_vectors=_pl_chunk_vectors,
     replay_summaries=_pl_replay_summaries,
+    partition=_pl_partition,
     parse_field={
         "int32": _pl_parse_int,
         "float32": _pl_parse_float,
         "date": _pl_parse_date,
         "str": _shared_parse_str,
     },
+    partition_impls=tuple(sorted(partition_mod.PARTITION_IMPLS)) + ("kernel",),
+    # "auto" resolution: the radix kernel when compiling for real hardware;
+    # under interpret=True (CPU containers/CI) the kernel runs op-by-op in
+    # the Pallas interpreter, where XLA's jit-fused radix pass (scatter2) is
+    # strictly faster — the kernel stays selectable (partition_impl="kernel")
+    # and is pinned bit-identical by the parity/fuzz/golden suites.
+    default_partition_impl=lambda cfg: "scatter2" if cfg.interpret else "kernel",
 ))

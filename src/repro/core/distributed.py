@@ -100,12 +100,14 @@ def _shard_parse(chunks: jax.Array, cfg: ParserConfig, axis: str) -> ShardedPars
     offs = offsets_mod.ChunkOffsets(local_offs.rec_offset + rec_base, g_t, g_o)
     ids = stages_mod.identify_symbols(ctx, chunk_offsets=offs)
 
-    # ---- §3.3 locally: tagging, partition, field index (shared stage) ----
+    # ---- §3.3 locally: materialize (shared stage, index-only plan) -------
     # Record tags are shard-local (0-based) so the field index stays small;
-    # rec_base restores global ids.
+    # rec_base restores global ids.  ``convert=False``: shards export the
+    # CSS + field index and each host converts its own batch.
     local_rec = ids.record_id - rec_base
-    cols = stages_mod.build_columns(
-        chunks, ctx.classes, local_rec, ids.column_id, cfg
+    plan = stages_mod.plan_materialize(cfg, backend, convert=False)
+    cols, _ = stages_mod.materialize(
+        chunks, ctx.classes, local_rec, ids.column_id, plan, cfg, backend
     )
 
     return ShardedParse(

@@ -11,6 +11,10 @@ which additionally handles *empty* fields (no symbols at all → length 0,
 offset patched harmlessly) and *missing* fields in ragged records, neither
 of which produce an RLE run.  For the inline/vector tagging modes the index
 instead derives from terminator/flag positions, matching paper §4.1.
+
+:func:`field_index` dispatches on the tagging mode — the single entry point
+``stages.materialize`` uses, so the mode split lives here with the index
+logic rather than in the stage layer.
 """
 from __future__ import annotations
 
@@ -26,6 +30,30 @@ class FieldIndex(NamedTuple):
     offset: jax.Array   # (n_cols, max_records) int32 — absolute into the CSS buffer
     length: jax.Array   # (n_cols, max_records) int32
     present: jax.Array  # (n_cols, max_records) bool — field materialised in input
+
+
+def field_index(
+    mode: str,
+    col_sorted: jax.Array,
+    rec_sorted: jax.Array,
+    col_start: jax.Array,
+    n_cols: int,
+    max_records: int,
+    term_flag=None,
+) -> "FieldIndex":
+    """Build the field index for a tagging mode (paper §3.3 / §4.1).
+
+    ``tagged`` derives the index from the sorted (column, record) tags and
+    ignores ``col_start``/``term_flag``; ``inline``/``vector`` derive it
+    from the partitioned terminator flags (``term_flag`` required).
+    """
+    if mode == "tagged":
+        return field_index_tagged(col_sorted, rec_sorted, n_cols, max_records)
+    if term_flag is None:
+        raise ValueError(f"tagging mode {mode!r} needs the terminator flags")
+    return field_index_terminated(
+        term_flag, col_sorted, rec_sorted, col_start, n_cols, max_records
+    )
 
 
 def field_index_tagged(

@@ -3,9 +3,9 @@
 Pipeline (all on-device, one jit):
 
     bytes ─▶ symbol groups ─▶ chunk transition vectors ─▶ composite scan
-          ─▶ replay (class codes) ─▶ record/column ids ─▶ tagging
-          ─▶ stable partition (CSS) ─▶ field index ─▶ type conversion
-          ─▶ validation
+          ─▶ replay (class codes) ─▶ record/column ids ─▶ materialize
+             (tagging ─▶ stable partition (CSS) ─▶ field index ─▶ type
+              conversion, per a static MaterializePlan) ─▶ validation
 
 The stage bodies live in ``core/stages.py`` and are shared with the
 distributed and streaming drivers; ``ParserConfig.backend`` selects who runs
@@ -65,7 +65,8 @@ class ParserConfig:
     max_records: int
     chunk_size: int = 64
     tagging: str = "tagged"          # tagged | inline | vector
-    partition_impl: str = "scatter"  # scatter | argsort
+    partition_impl: str = "auto"     # auto | argsort | scatter | scatter2 |
+                                     # kernel (backend-resolved; stages.py)
     use_matmul_scan: bool = False
     int_width: int = 11
     float_width: int = 24
@@ -73,9 +74,12 @@ class ParserConfig:
     backend: str = "reference"       # reference | pallas (core/backends.py)
     interpret: bool = True           # Pallas interpret mode (CPU container)
     block_chunks: int = backends_mod.DEFAULT_BLOCK_CHUNKS
+    fuse_typeconv: bool = True       # pallas: fused gather+convert kernels
+                                     # (False = XLA gather + arithmetic kernel)
 
     def __post_init__(self):
-        backends_mod.get_backend(self.backend)  # fail fast on typos
+        # fail fast on typos: backend name + partition impl resolution
+        stages_mod.plan_materialize(self, backends_mod.get_backend(self.backend))
 
     @property
     def record_delim_byte(self) -> int:
@@ -110,13 +114,13 @@ def _parse_impl(raw_chunks: jax.Array, cfg: ParserConfig,
     # §3.2 — record/column identification from the summaries.
     ids = stages_mod.identify_symbols(ctx)
 
-    # §3.2/§3.3 — tagging, stable partition, field index (shared stage).
-    cols = stages_mod.build_columns(
-        raw_chunks, ctx.classes, ids.record_id, ids.column_id, cfg
+    # §3.2/§3.3 — backend-owned materialization: tagging, stable partition,
+    # field index, type conversion (one shared stage, one static plan).
+    plan = stages_mod.plan_materialize(cfg, backend)
+    cols, values = stages_mod.materialize(
+        raw_chunks, ctx.classes, ids.record_id, ids.column_id, plan, cfg,
+        backend,
     )
-
-    # §3.3 — type conversion.
-    values = stages_mod.convert_types(cols.css, cols.findex, cfg, backend)
 
     # §4.3 — validation.
     flat_classes = ctx.classes.reshape(-1)

@@ -10,19 +10,33 @@ exactly these functions; the byte-level hot loops inside them come from the
     determine_contexts  — §3.1 context determination + replay, fused with
                           the §3.2 per-chunk offset summaries
     identify_symbols    — §3.2 record/column ids from the chunk summaries
-    build_columns       — §3.2/§4.1 tagging → §3.3 stable partition →
-                          field index
-    convert_types       — §3.3 type conversion (every dtype routed through
-                          the backend's per-dtype ``parse_field`` table)
+    materialize         — the §3.2/§3.3 back half as ONE backend-owned
+                          stage: tagging → stable partition → field index
+                          → per-dtype type conversion.  What to build is
+                          described by a static :class:`MaterializePlan`
+                          (``plan_materialize``); *how* each step runs is
+                          the backend's call (``backend.partition``,
+                          ``backend.parse_field``) — so fusing partition
+                          and conversion into kernels is a backend change,
+                          never a driver change.
     locate_carry        — §4.4 carry-over boundary for streaming
+
+Materialization is a backend responsibility, not driver glue: drivers pass
+the plan through and receive a :class:`ColumnBatch` plus converted values.
+On ``backend="pallas"`` the partition runs the two-pass radix kernel
+(``kernels.partition``) and every typed column converts in a fused
+gather+convert kernel (``kernels.numparse``) that indexes the CSS in-kernel
+— no XLA ``take``/gather between the field index and conversion.
 
 Driver-specific glue stays in the drivers: the cross-device prefix scans of
 ``DistributedParser`` plug in via ``prefix_fn`` / ``chunk_offsets`` without
-this module knowing about meshes.
+this module knowing about meshes, and the distributed driver plans with
+``convert=False`` because its shards export unconverted (each host converts
+its own batch).
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +67,63 @@ class ColumnBatch(NamedTuple):
     col_start: jax.Array  # (n_cols+1,) int32
     col_count: jax.Array  # (n_cols+1,) int32
     findex: fields_mod.FieldIndex
+
+
+class MaterializePlan(NamedTuple):
+    """Static description of the §3.3 back half (what ``materialize`` builds).
+
+    Everything here is hashable config, baked into the jitted closure:
+    the tagging output layout, the partition choice (already resolved —
+    never ``"auto"``), and which columns convert to which dtype.  Building
+    the plan up front keeps driver call sites one line and makes the
+    fused/unfused choice a plan+backend property instead of driver glue.
+    """
+
+    tagging: str                                # tagged | inline | vector
+    partition_impl: str                         # argsort|scatter|scatter2|kernel
+    n_cols: int
+    max_records: int
+    selected: Optional[Tuple[bool, ...]]        # None = every column selected
+    convert: Tuple[Tuple[str, int, str], ...]   # (name, schema index, dtype)
+
+
+def plan_materialize(cfg, backend: ParseBackend, *, convert: bool = True
+                     ) -> MaterializePlan:
+    """Resolve ``cfg`` into a :class:`MaterializePlan` for ``backend``.
+
+    ``partition_impl="auto"`` becomes the backend's config-aware default
+    (on ``pallas``: the radix kernel when compiling for real hardware, the
+    jit-fused jnp radix pass under ``interpret=True``); explicit impls are
+    validated against ``backend.partition_impls`` so typos and
+    backend-foreign impls fail at config time, not under jit.  With
+    ``convert=False`` the plan builds the CSS + field index only (the
+    distributed driver's per-shard contract).
+    """
+    impl = cfg.partition_impl
+    if impl == "auto":
+        impl = backend.default_partition_impl(cfg)
+    if impl not in backend.partition_impls:
+        raise ValueError(
+            f"partition_impl {impl!r} not supported by backend "
+            f"{backend.name!r}; available: {backend.partition_impls}"
+        )
+    selected = None
+    if not all(c.selected for c in cfg.schema.columns):
+        selected = tuple(bool(c.selected) for c in cfg.schema.columns)
+    conv: Tuple[Tuple[str, int, str], ...] = ()
+    if convert:
+        conv = tuple(
+            (col.name, c, col.dtype)
+            for c, col in enumerate(cfg.schema.columns) if col.selected
+        )
+    return MaterializePlan(
+        tagging=cfg.tagging,
+        partition_impl=impl,
+        n_cols=cfg.schema.n_cols,
+        max_records=cfg.max_records,
+        selected=selected,
+        convert=conv,
+    )
 
 
 def determine_contexts(
@@ -97,80 +168,64 @@ def identify_symbols(
     return offsets_mod.symbol_ids_from_chunks(ctx.classes, chunk_offsets)
 
 
-def build_columns(
+def materialize(
     raw_chunks: jax.Array,
     classes: jax.Array,
     record_id: jax.Array,
     column_id: jax.Array,
+    plan: MaterializePlan,
     cfg,
-) -> ColumnBatch:
-    """§3.2/§4.1 tagging → §3.3 stable partition → field index.
+    backend: ParseBackend,
+) -> Tuple[ColumnBatch, Dict[str, typeconv_mod.Parsed]]:
+    """§3.2/§4.1 tagging → §3.3 stable partition → field index → typeconv.
 
     ``record_id`` is whatever the caller wants in the field index: global
     ids for the single-device parser, shard-local ids for the distributed
-    one.
+    one.  The partition and every per-dtype conversion dispatch through the
+    backend (``backend.partition`` / ``backend.parse_field``); invalid
+    numeric values are normalised to 0 so backends agree bit-for-bit (their
+    Horner loops treat non-digit garbage differently, and garbage values
+    are meaningless anyway — ``valid`` gates them).  ``str`` is exempt: its
+    ``value`` is the field offset, which the export path may use regardless
+    of validity.
     """
-    n_cols = cfg.schema.n_cols
+    n_cols = plan.n_cols
     flat_classes = classes.reshape(-1)
 
-    selected = None
-    if not all(c.selected for c in cfg.schema.columns):
-        selected = np.asarray([c.selected for c in cfg.schema.columns])
+    selected = np.asarray(plan.selected) if plan.selected is not None else None
     tagged = tagging_mod.tag_symbols(
         raw_chunks, flat_classes, record_id, column_id, n_cols,
-        cfg.tagging, selected_mask=selected,
+        plan.tagging, selected_mask=selected,
     )
 
-    part = partition_mod.PARTITION_IMPLS[cfg.partition_impl](tagged.col_tag, n_cols)
-    if cfg.tagging == "tagged":
+    part = backend.partition(tagged.col_tag, n_cols, plan.partition_impl, cfg)
+    if plan.tagging == "tagged":
         # delim_flag is structurally all-False in tagged mode: skip one
         # N-sized gather+write (EXPERIMENTS.md §Perf parser iteration)
         css, rec_sorted, col_sorted = partition_mod.apply_partition(
             part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag
         )
-        findex = fields_mod.field_index_tagged(
-            col_sorted, rec_sorted, n_cols, cfg.max_records
-        )
+        flag_sorted = None
     else:
         css, rec_sorted, col_sorted, flag_sorted = partition_mod.apply_partition(
             part.perm, tagged.symbol, tagged.rec_tag, tagged.col_tag,
             tagged.delim_flag,
         )
-        findex = fields_mod.field_index_terminated(
-            flag_sorted, col_sorted, rec_sorted, part.col_start, n_cols,
-            cfg.max_records,
-        )
-    return ColumnBatch(css, part.col_start, part.col_count, findex)
+    findex = fields_mod.field_index(
+        plan.tagging, col_sorted, rec_sorted, part.col_start, n_cols,
+        plan.max_records, term_flag=flag_sorted,
+    )
+    cols = ColumnBatch(css, part.col_start, part.col_count, findex)
 
-
-def convert_types(
-    css: jax.Array,
-    findex: fields_mod.FieldIndex,
-    cfg,
-    backend: ParseBackend,
-) -> Dict[str, typeconv_mod.Parsed]:
-    """§3.3 type conversion per selected column.
-
-    *Every* column dispatches through ``backend.parse_field[dtype]`` — on
-    ``backend="pallas"`` int32/float32/date columns all run inside
-    ``kernels.numparse`` Pallas kernels; there is no per-dtype jnp fallback
-    on the hot path.  Invalid numeric values are normalised to 0 so backends
-    agree bit-for-bit (their Horner loops treat non-digit garbage
-    differently, and garbage values are meaningless anyway — ``valid`` gates
-    them).  ``str`` is exempt: its ``value`` is the field offset, which the
-    export path may use regardless of validity.
-    """
     values: Dict[str, typeconv_mod.Parsed] = {}
-    for c, col in enumerate(cfg.schema.columns):
-        if not col.selected:
-            continue
-        off = findex.offset[c]
-        ln = findex.length[c]
-        p = backend.parse_field[col.dtype](css, off, ln, cfg)
-        if col.dtype != "str":
+    for name, c, dtype in plan.convert:
+        p = backend.parse_field[dtype](
+            css, findex.offset[c], findex.length[c], cfg
+        )
+        if dtype != "str":
             p = p._replace(value=jnp.where(p.valid, p.value, jnp.zeros_like(p.value)))
-        values[col.name] = p
-    return values
+        values[name] = p
+    return cols, values
 
 
 def locate_carry(flat_classes: jax.Array) -> jax.Array:

@@ -16,6 +16,11 @@ there is no recompilation in the steady state.
 The carry boundary comes from parse *metadata*, not from a host ``rfind``:
 a newline inside a quoted field must not be mistaken for a record boundary,
 which is exactly the context problem the paper solves.
+
+This driver composes :class:`Parser` partition-by-partition, so it inherits
+the backend-owned materialization path (``stages.materialize``) untouched:
+with ``backend="pallas"`` every partition runs the radix partition kernel
+and the fused gather+convert typeconv kernels with zero changes here.
 """
 from __future__ import annotations
 

@@ -1,22 +1,44 @@
 """Pallas TPU kernels for typed field conversion (paper §3.3 type conversion).
 
-The memory-irregular step (gathering each field's bytes out of the CSS) is
-done by XLA's gather — TPU lanes cannot index HBM per-lane.  What the kernels
-own is the arithmetic hot loop over the gathered ``(R, W)`` byte matrix, all
-on the VPU with the byte matrix VMEM-resident.  One grid step processes
-``block_rows`` fields; the width axis is statically unrolled (W ≤ ~24).
+Two kernel families share one arithmetic core per dtype (``_int_arith`` /
+``_float_arith`` / ``_date_arith`` — all on the VPU, width axis statically
+unrolled, W ≤ ~24):
 
-Three kernels cover every non-string dtype the schema layer knows:
+  * ``parse_*_fields``        — unfused: the caller gathers each field's
+    bytes out of the CSS with XLA's gather and hands the kernel a dense
+    ``(R, W)`` byte matrix.  One grid step processes ``block_rows`` fields.
+  * ``parse_*_fields_fused``  — fused gather+convert: the kernel receives
+    the CSS itself plus ``(offset, length)`` from the field index and owns
+    the indexing (``css[offset[r] + w]`` against the VMEM-resident buffer),
+    so no ``(R, W)`` byte matrix ever round-trips through HBM between the
+    field index and conversion — the memory-movement fusion the paper's
+    device pipeline relies on.  Mosaic lowers the in-kernel index as a
+    VMEM dynamic gather, and the CSS block rides whole in VMEM — so on
+    real hardware the fused path also caps the per-parse CSS at VMEM
+    capacity (~16 MB/core).  Both limits share one fallback: a per-block
+    window DMA (offsets within a column are sorted, so each row block's
+    bytes live in one contiguous CSS window — ROADMAP open item); until
+    then ``fuse_typeconv=False`` is the over-capacity escape hatch.
+    Interpret mode (this container) is exact and uncapped either way.
 
-  * ``parse_int_fields``   — sign detection, digit validation, branchless
-    Horner with pre-step overflow detection (``acc*10+d > MAX ⇔
-    acc > (MAX-d)//10`` — no wider accumulator needed).
-  * ``parse_float_fields`` — sign/mantissa/dot/exponent sections with
-    statically-unrolled masked Horner, mirroring ``typeconv.parse_float``
-    operation-for-operation so results are bit-identical.
-  * ``parse_date_fields``  — per-lane digit/separator validation (including
-    days-in-month and time-range semantics) + Hinnant days-from-civil,
-    mirroring ``typeconv.parse_date``.
+Because both families run the same arithmetic on the same live lanes, they
+are bit-identical to each other and to the jnp reference
+(``typeconv.parse_int`` / ``parse_float`` / ``parse_date``).  Dead lanes
+(beyond ``length``) may differ between families — the unfused gather
+pre-masks them to 0, the fused path reads whatever follows the field — but
+every dtype's arithmetic either masks on ``lane < length`` itself or never
+consumes dead lanes.
+
+Kernels cover every non-string dtype the schema layer knows:
+
+  * int   — sign detection, digit validation, branchless Horner with
+    pre-step overflow detection (``acc*10+d > MAX ⇔ acc > (MAX-d)//10`` —
+    no wider accumulator needed).
+  * float — sign/mantissa/dot/exponent sections with statically-unrolled
+    masked Horner, mirroring ``typeconv.parse_float`` op-for-op.
+  * date  — per-lane digit/separator validation (including days-in-month
+    and time-range semantics) + Hinnant days-from-civil, mirroring
+    ``typeconv.parse_date``.
 
 This is the thread-exclusive collaboration level of the paper; the skew-
 robust fallback (segmented-scan Horner over the raw CSS) lives in
@@ -39,165 +61,199 @@ _I32_MAX = typeconv_mod.INT32_MAX
 
 
 # ---------------------------------------------------------------------------
-# int32
+# per-dtype arithmetic (shared by the unfused and fused kernels)
 # ---------------------------------------------------------------------------
+
+def _int_arith(b, ln, block_rows: int, width: int):
+    """``(BR, W) int32`` field bytes + ``(BR,) int32`` lengths →
+    ``(value (BR,) int32, ok (BR,) bool)``.  Only lanes ``< ln`` are read."""
+    first = b[:, 0]
+    neg = first == ord("-")
+    has_sign = neg | (first == ord("+"))
+    sign = jnp.where(neg, -1, 1)
+
+    acc = jnp.zeros((block_rows,), jnp.int32)
+    bad = jnp.zeros((block_rows,), jnp.bool_)
+    ndig = jnp.zeros((block_rows,), jnp.int32)
+    for w in range(width):
+        d = b[:, w] - _ZERO
+        # lane w is a live digit if it is inside the field and not the sign
+        live = (w < ln) & ~(has_sign & (w == 0))
+        is_digit = (d >= 0) & (d <= 9)
+        bad |= live & ~is_digit
+        use = live & is_digit
+        # magnitude overflow: acc*10+d would exceed INT32_MAX
+        bad |= use & (acc > (_I32_MAX - d) // 10)
+        acc = jnp.where(use, acc * 10 + d, acc)
+        ndig += use.astype(jnp.int32)
+
+    ok = ~bad & (ndig > 0) & (ln <= width)
+    return sign * acc, ok
+
+
+def _float_arith(raw, ln, block_rows: int, width: int):
+    """Masked float32 parse over ``(BR, W) int32`` bytes — mirrors
+    ``typeconv.parse_float`` operation-for-operation."""
+    br, w = block_rows, width
+    lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
+    m = lane < ln[:, None]
+    raw = jnp.where(m, raw, 0)
+
+    # Optional leading sign: shift the lane window left by one where
+    # present (same trick as typeconv._sign_and_digits).
+    first = raw[:, 0]
+    has_sign = (first == ord("-")) | (first == ord("+"))
+    sign = jnp.where(first == ord("-"), -1, 1).astype(jnp.int32)
+    shifted = jnp.concatenate(
+        [raw[:, 1:], jnp.zeros((br, 1), jnp.int32)], axis=1)
+    shifted_m = jnp.concatenate(
+        [m[:, 1:], jnp.zeros((br, 1), jnp.bool_)], axis=1)
+    b = jnp.where(has_sign[:, None], shifted, raw)
+    bm = jnp.where(has_sign[:, None], shifted_m, m)
+
+    is_dot = (b == ord(".")) & bm
+    is_e = ((b == ord("e")) | (b == ord("E"))) & bm
+    dot_pos = jnp.min(jnp.where(is_dot, lane, w), axis=1)   # (BR,)
+    e_pos = jnp.min(jnp.where(is_e, lane, w), axis=1)
+
+    d = b - _ZERO
+    is_digit = (d >= 0) & (d <= 9)
+
+    in_mant = bm & (lane < e_pos[:, None])
+    mant_digit = in_mant & ~is_dot
+    ok = (jnp.sum(is_dot, axis=1) <= 1) & ((dot_pos <= e_pos) | (dot_pos >= w))
+    ok &= jnp.all(is_digit | ~mant_digit, axis=1)
+    ok &= jnp.any(mant_digit & is_digit, axis=1)
+
+    # Mantissa Horner, statically unrolled over the width.
+    active = mant_digit & is_digit
+    dm = jnp.where(active, d, 0).astype(jnp.float32)
+    macc = jnp.zeros((br,), jnp.float32)
+    for k in range(w):
+        macc = jnp.where(active[:, k], macc * 10.0 + dm[:, k], macc)
+    frac_digits = jnp.sum(active & (lane > dot_pos[:, None]), axis=1)
+
+    # Exponent section.
+    after_e = bm & (lane > e_pos[:, None])
+    e_sign_lane = jnp.clip(e_pos + 1, 0, w - 1)
+    e_first = jnp.sum(jnp.where(lane == e_sign_lane[:, None], b, 0), axis=1)
+    has_e = e_pos < w
+    e_neg = has_e & (e_first == ord("-"))
+    e_signed = has_e & ((e_first == ord("-")) | (e_first == ord("+")))
+    exp_digit = after_e & (lane > (e_pos + jnp.where(e_signed, 1, 0))[:, None])
+    ok &= jnp.all(is_digit | ~exp_digit, axis=1)
+    ok &= ~has_e | jnp.any(exp_digit, axis=1)
+    de = jnp.where(exp_digit & is_digit, d, 0)
+    eacc = jnp.zeros((br,), jnp.int32)
+    for k in range(w):
+        eacc = jnp.where(exp_digit[:, k], eacc * 10 + de[:, k], eacc)
+
+    exp = jnp.where(e_neg, -eacc, eacc) - frac_digits
+    value = (sign.astype(jnp.float32) * macc *
+             jnp.power(jnp.float32(10.0), exp.astype(jnp.float32)))
+    ok &= ln <= w
+    return value, ok
+
+
+def _date_arith(raw, ln, block_rows: int):
+    """``YYYY-MM-DD[ HH:MM:SS]`` over ``(BR, 19) int32`` bytes — mirrors
+    ``typeconv.parse_date`` (civil-calendar + time-range validation)."""
+    br, w = block_rows, DATE_WIDTH
+    lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
+    raw = jnp.where(lane < ln[:, None], raw, 0)
+    d = raw - _ZERO
+
+    def num(*lanes):
+        acc = jnp.zeros((br,), jnp.int32)
+        for k in lanes:
+            acc = acc * 10 + d[:, k]
+        return acc
+
+    year, mon, day = num(0, 1, 2, 3), num(5, 6), num(8, 9)
+    has_time = ln >= 19
+    hh = jnp.where(has_time, num(11, 12), 0)
+    mm = jnp.where(has_time, num(14, 15), 0)
+    ss = jnp.where(has_time, num(17, 18), 0)
+
+    dd = (d >= 0) & (d <= 9)
+    ok = (dd[:, 0] & dd[:, 1] & dd[:, 2] & dd[:, 3] &
+          dd[:, 5] & dd[:, 6] & dd[:, 8] & dd[:, 9])
+    ok &= (raw[:, 4] == ord("-")) & (raw[:, 7] == ord("-"))
+    ok &= (ln == 10) | (ln == 19)
+    time_ok = (dd[:, 11] & dd[:, 12] & dd[:, 14] & dd[:, 15] &
+               dd[:, 17] & dd[:, 18] &
+               (raw[:, 13] == ord(":")) & (raw[:, 16] == ord(":")) &
+               ((raw[:, 10] == ord(" ")) | (raw[:, 10] == ord("T"))))
+    ok &= jnp.where(has_time, time_ok, True)
+    ok &= ((mon >= 1) & (mon <= 12) & (day >= 1) &
+           (day <= typeconv_mod._days_in_month(year, mon)))
+    ok &= jnp.where(has_time, (hh <= 23) & (mm <= 59) & (ss <= 59), True)
+
+    secs = (typeconv_mod._days_from_civil(year, mon, day) * 86400 +
+            hh * 3600 + mm * 60 + ss)
+    return secs, ok
+
 
 def _make_int_kernel(block_rows: int, width: int):
     def kernel(bytes_ref, len_ref, val_ref, ok_ref):
         b = bytes_ref[...].astype(jnp.int32)       # (BR, W)
         ln = len_ref[...][:, 0]                     # (BR,)
-
-        first = b[:, 0]
-        neg = first == ord("-")
-        has_sign = neg | (first == ord("+"))
-        sign = jnp.where(neg, -1, 1)
-
-        acc = jnp.zeros((block_rows,), jnp.int32)
-        bad = jnp.zeros((block_rows,), jnp.bool_)
-        ndig = jnp.zeros((block_rows,), jnp.int32)
-        for w in range(width):
-            d = b[:, w] - _ZERO
-            # lane w is a live digit if it is inside the field and not the sign
-            live = (w < ln) & ~(has_sign & (w == 0))
-            is_digit = (d >= 0) & (d <= 9)
-            bad |= live & ~is_digit
-            use = live & is_digit
-            # magnitude overflow: acc*10+d would exceed INT32_MAX
-            bad |= use & (acc > (_I32_MAX - d) // 10)
-            acc = jnp.where(use, acc * 10 + d, acc)
-            ndig += use.astype(jnp.int32)
-
-        ok = ~bad & (ndig > 0) & (ln <= width)
-        val_ref[...] = (sign * acc)[:, None]
+        val, ok = _int_arith(b, ln, block_rows, width)
+        val_ref[...] = val[:, None]
         ok_ref[...] = ok.astype(jnp.int32)[:, None]
 
     return kernel
 
 
-# ---------------------------------------------------------------------------
-# float32
-# ---------------------------------------------------------------------------
-
 def _make_float_kernel(block_rows: int, width: int):
-    br, w = block_rows, width
-
     def kernel(bytes_ref, len_ref, val_ref, ok_ref):
         raw = bytes_ref[...].astype(jnp.int32)      # (BR, W)
         ln = len_ref[...][:, 0]                      # (BR,)
-        lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
-        m = lane < ln[:, None]
-        raw = jnp.where(m, raw, 0)
-
-        # Optional leading sign: shift the lane window left by one where
-        # present (same trick as typeconv._sign_and_digits).
-        first = raw[:, 0]
-        has_sign = (first == ord("-")) | (first == ord("+"))
-        sign = jnp.where(first == ord("-"), -1, 1).astype(jnp.int32)
-        shifted = jnp.concatenate(
-            [raw[:, 1:], jnp.zeros((br, 1), jnp.int32)], axis=1)
-        shifted_m = jnp.concatenate(
-            [m[:, 1:], jnp.zeros((br, 1), jnp.bool_)], axis=1)
-        b = jnp.where(has_sign[:, None], shifted, raw)
-        bm = jnp.where(has_sign[:, None], shifted_m, m)
-
-        is_dot = (b == ord(".")) & bm
-        is_e = ((b == ord("e")) | (b == ord("E"))) & bm
-        dot_pos = jnp.min(jnp.where(is_dot, lane, w), axis=1)   # (BR,)
-        e_pos = jnp.min(jnp.where(is_e, lane, w), axis=1)
-
-        d = b - _ZERO
-        is_digit = (d >= 0) & (d <= 9)
-
-        in_mant = bm & (lane < e_pos[:, None])
-        mant_digit = in_mant & ~is_dot
-        ok = (jnp.sum(is_dot, axis=1) <= 1) & ((dot_pos <= e_pos) | (dot_pos >= w))
-        ok &= jnp.all(is_digit | ~mant_digit, axis=1)
-        ok &= jnp.any(mant_digit & is_digit, axis=1)
-
-        # Mantissa Horner, statically unrolled over the width.
-        active = mant_digit & is_digit
-        dm = jnp.where(active, d, 0).astype(jnp.float32)
-        macc = jnp.zeros((br,), jnp.float32)
-        for k in range(w):
-            macc = jnp.where(active[:, k], macc * 10.0 + dm[:, k], macc)
-        frac_digits = jnp.sum(active & (lane > dot_pos[:, None]), axis=1)
-
-        # Exponent section.
-        after_e = bm & (lane > e_pos[:, None])
-        e_sign_lane = jnp.clip(e_pos + 1, 0, w - 1)
-        e_first = jnp.sum(jnp.where(lane == e_sign_lane[:, None], b, 0), axis=1)
-        has_e = e_pos < w
-        e_neg = has_e & (e_first == ord("-"))
-        e_signed = has_e & ((e_first == ord("-")) | (e_first == ord("+")))
-        exp_digit = after_e & (lane > (e_pos + jnp.where(e_signed, 1, 0))[:, None])
-        ok &= jnp.all(is_digit | ~exp_digit, axis=1)
-        ok &= ~has_e | jnp.any(exp_digit, axis=1)
-        de = jnp.where(exp_digit & is_digit, d, 0)
-        eacc = jnp.zeros((br,), jnp.int32)
-        for k in range(w):
-            eacc = jnp.where(exp_digit[:, k], eacc * 10 + de[:, k], eacc)
-
-        exp = jnp.where(e_neg, -eacc, eacc) - frac_digits
-        value = (sign.astype(jnp.float32) * macc *
-                 jnp.power(jnp.float32(10.0), exp.astype(jnp.float32)))
-        ok &= ln <= w
-
-        val_ref[...] = value[:, None]
+        val, ok = _float_arith(raw, ln, block_rows, width)
+        val_ref[...] = val[:, None]
         ok_ref[...] = ok.astype(jnp.int32)[:, None]
 
     return kernel
 
 
-# ---------------------------------------------------------------------------
-# date
-# ---------------------------------------------------------------------------
-
 def _make_date_kernel(block_rows: int):
-    br, w = block_rows, DATE_WIDTH
-
     def kernel(bytes_ref, len_ref, val_ref, ok_ref):
         raw = bytes_ref[...].astype(jnp.int32)      # (BR, 19)
         ln = len_ref[...][:, 0]                      # (BR,)
-        lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
-        raw = jnp.where(lane < ln[:, None], raw, 0)
-        d = raw - _ZERO
-
-        def num(*lanes):
-            acc = jnp.zeros((br,), jnp.int32)
-            for k in lanes:
-                acc = acc * 10 + d[:, k]
-            return acc
-
-        year, mon, day = num(0, 1, 2, 3), num(5, 6), num(8, 9)
-        has_time = ln >= 19
-        hh = jnp.where(has_time, num(11, 12), 0)
-        mm = jnp.where(has_time, num(14, 15), 0)
-        ss = jnp.where(has_time, num(17, 18), 0)
-
-        dd = (d >= 0) & (d <= 9)
-        ok = (dd[:, 0] & dd[:, 1] & dd[:, 2] & dd[:, 3] &
-              dd[:, 5] & dd[:, 6] & dd[:, 8] & dd[:, 9])
-        ok &= (raw[:, 4] == ord("-")) & (raw[:, 7] == ord("-"))
-        ok &= (ln == 10) | (ln == 19)
-        time_ok = (dd[:, 11] & dd[:, 12] & dd[:, 14] & dd[:, 15] &
-                   dd[:, 17] & dd[:, 18] &
-                   (raw[:, 13] == ord(":")) & (raw[:, 16] == ord(":")) &
-                   ((raw[:, 10] == ord(" ")) | (raw[:, 10] == ord("T"))))
-        ok &= jnp.where(has_time, time_ok, True)
-        ok &= ((mon >= 1) & (mon <= 12) & (day >= 1) &
-               (day <= typeconv_mod._days_in_month(year, mon)))
-        ok &= jnp.where(has_time, (hh <= 23) & (mm <= 59) & (ss <= 59), True)
-
-        secs = (typeconv_mod._days_from_civil(year, mon, day) * 86400 +
-                hh * 3600 + mm * 60 + ss)
-        val_ref[...] = secs[:, None]
+        val, ok = _date_arith(raw, ln, block_rows)
+        val_ref[...] = val[:, None]
         ok_ref[...] = ok.astype(jnp.int32)[:, None]
 
     return kernel
 
 
 # ---------------------------------------------------------------------------
-# pallas_call plumbing (shared by all three kernels)
+# fused gather+convert kernels: index the CSS inside the kernel block
+# ---------------------------------------------------------------------------
+
+def _make_fused_kernel(arith, block_rows: int, width: int):
+    """Wrap a per-dtype arithmetic in the in-kernel CSS gather.
+
+    ``arith(b (BR, W) int32, ln (BR,)) -> (val, ok)``.  The CSS arrives
+    width-padded (see ``_fused_call``) so every ``offset + w`` index is in
+    range without per-lane clamping.
+    """
+
+    def kernel(css_ref, off_ref, len_ref, val_ref, ok_ref):
+        css = css_ref[...][0]                       # (NP,) uint8, VMEM-resident
+        offs = off_ref[...][:, 0]                   # (BR,)
+        ln = len_ref[...][:, 0]                     # (BR,)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (block_rows, width), 1)
+        b = css[offs[:, None] + lane].astype(jnp.int32)   # in-kernel gather
+        val, ok = arith(b, ln)
+        val_ref[...] = val[:, None]
+        ok_ref[...] = ok.astype(jnp.int32)[:, None]
+
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# pallas_call plumbing (shared by all kernels)
 # ---------------------------------------------------------------------------
 
 def _call_rowwise(kernel, field_bytes, lengths, block_rows, val_dtype, interpret):
@@ -222,6 +278,43 @@ def _call_rowwise(kernel, field_bytes, lengths, block_rows, val_dtype, interpret
         ],
         interpret=interpret,
     )(field_bytes, lengths.astype(jnp.int32)[:, None])
+    return val[:, 0], ok[:, 0].astype(bool)
+
+
+def _fused_call(arith, css, offsets, lengths, width, block_rows, val_dtype,
+                interpret):
+    n = css.shape[0]
+    r = offsets.shape[0]
+    if r == 0:  # degenerate but public: no fields to convert
+        return jnp.zeros((0,), val_dtype), jnp.zeros((0,), bool)
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} not a multiple of block_rows {br}")
+    # Width-pad the CSS so offset + lane never indexes past the buffer
+    # (offsets of empty/padding rows are clamped to [0, n]); O(W), not an
+    # N- or R·W-sized materialisation.
+    css_p = jnp.concatenate([css, jnp.zeros((width,), css.dtype)])[None, :]
+    offs = jnp.clip(offsets.astype(jnp.int32), 0, n)
+    np_ = n + width
+    kernel = _make_fused_kernel(arith, br, width)
+    val, ok = pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 1), val_dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(css_p, offs[:, None], lengths.astype(jnp.int32)[:, None])
     return val[:, 0], ok[:, 0].astype(bool)
 
 
@@ -272,3 +365,54 @@ def parse_date_fields(
     kernel = _make_date_kernel(min(block_rows, r))
     return _call_rowwise(kernel, field_bytes, lengths, block_rows,
                          jnp.int32, interpret)
+
+
+def parse_int_fields_fused(
+    css: jax.Array,
+    offsets: jax.Array,
+    lengths: jax.Array,
+    *,
+    width: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """``(N,) uint8`` CSS + ``(R,) int32`` field offsets/lengths →
+    ``(value (R,) int32, ok (R,) bool)`` with the gather inside the kernel."""
+    r = offsets.shape[0]
+    br = min(block_rows, r)
+    arith = lambda b, ln: _int_arith(b, ln, br, width)
+    return _fused_call(arith, css, offsets, lengths, width, block_rows,
+                       jnp.int32, interpret)
+
+
+def parse_float_fields_fused(
+    css: jax.Array,
+    offsets: jax.Array,
+    lengths: jax.Array,
+    *,
+    width: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Fused float32 twin of ``parse_float_fields`` — bit-identical."""
+    r = offsets.shape[0]
+    br = min(block_rows, r)
+    arith = lambda b, ln: _float_arith(b, ln, br, width)
+    return _fused_call(arith, css, offsets, lengths, width, block_rows,
+                       jnp.float32, interpret)
+
+
+def parse_date_fields_fused(
+    css: jax.Array,
+    offsets: jax.Array,
+    lengths: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """Fused date twin of ``parse_date_fields`` — bit-identical."""
+    r = offsets.shape[0]
+    br = min(block_rows, r)
+    arith = lambda b, ln: _date_arith(b, ln, br)
+    return _fused_call(arith, css, offsets, lengths, DATE_WIDTH, block_rows,
+                       jnp.int32, interpret)

@@ -1,11 +1,20 @@
 """Jit'd wrappers for the numparse kernels.
 
-``parse_*_column`` are the field-index entry points ``backend="pallas"``
-routes typed columns through: gather a column's field bytes out of the CSS
-(XLA gather — TPU lanes cannot index HBM per-lane), pad the row count to the
-kernel block, and hand the dense ``(R, W)`` matrix to the Pallas arithmetic
-kernel.  Row counts that do not divide the block are padded with zero-length
-fields and sliced off.
+Two families of field-index entry points:
+
+  * ``parse_*_column_fused`` — the default ``backend="pallas"`` path
+    (``cfg.fuse_typeconv=True``): hand the CSS plus ``(offset, length)``
+    straight to the fused Pallas kernel, which indexes the symbol buffer
+    inside the kernel block.  No XLA ``take``/gather and no ``(R, W)``
+    row-padded byte matrix between the field index and type conversion.
+  * ``parse_*_column``       — the unfused path: gather a column's field
+    bytes out of the CSS with XLA's gather and hand the dense ``(R, W)``
+    matrix to the arithmetic kernel.  Kept as the ``cfg.fuse_typeconv=False``
+    fallback and the benchmark baseline for the fusion.
+
+Both share the per-dtype arithmetic (``numparse._*_arith``), so they are
+bit-identical.  Row counts that do not divide the kernel block are padded
+with zero-length fields and sliced off.
 """
 from __future__ import annotations
 
@@ -82,3 +91,45 @@ def parse_date_column(css, offset, length,
     """Kernel-backed equivalent of ``typeconv.parse_date`` (bit-identical)."""
     return _gather_and_run(numparse.parse_date_fields, css, offset, length,
                            numparse.DATE_WIDTH, block_rows, interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused gather+convert entry points (the kernel owns the CSS indexing)
+# ---------------------------------------------------------------------------
+
+def _fused_column(kernel_fn, css, offset, length, block_rows, interpret, **kw):
+    br = min(block_rows, offset.shape[0])
+    off_p, r = pad_to_block(offset.astype(jnp.int32), br, 0)
+    len_p, _ = pad_to_block(length.astype(jnp.int32), br, 0)
+    val, ok = kernel_fn(css, off_p, len_p, block_rows=br, interpret=interpret,
+                        **kw)
+    val, ok = val[:r], ok[:r]
+    empty = length == 0
+    return typeconv_mod.Parsed(val, ok & ~empty, empty)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def parse_int_column_fused(css, offset, length, width: int = 11,
+                           block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                           interpret: bool = True) -> typeconv_mod.Parsed:
+    """Fused equivalent of ``parse_int_column`` (bit-identical, no XLA gather)."""
+    return _fused_column(numparse.parse_int_fields_fused, css, offset, length,
+                         block_rows, interpret, width=width)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def parse_float_column_fused(css, offset, length, width: int = 24,
+                             block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                             interpret: bool = True) -> typeconv_mod.Parsed:
+    """Fused equivalent of ``parse_float_column`` (bit-identical, no XLA gather)."""
+    return _fused_column(numparse.parse_float_fields_fused, css, offset, length,
+                         block_rows, interpret, width=width)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def parse_date_column_fused(css, offset, length,
+                            block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                            interpret: bool = True) -> typeconv_mod.Parsed:
+    """Fused equivalent of ``parse_date_column`` (bit-identical, no XLA gather)."""
+    return _fused_column(numparse.parse_date_fields_fused, css, offset, length,
+                         block_rows, interpret)

@@ -1,0 +1,1 @@
+from repro.kernels.partition import ops, partition, ref  # noqa: F401

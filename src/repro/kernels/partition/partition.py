@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the §3.3 stable partition (paper's radix pass).
+
+The paper partitions the tagged symbol stream with one stable radix-sort
+pass over column tags (CUB): per-block column histograms, an exclusive
+prefix over (block, column), then a scatter to each symbol's destination.
+On TPU the whole counting half collapses into ONE kernel, because Pallas
+grids execute *sequentially*: a VMEM carry of per-column counts persists
+across grid steps, so each step can histogram its blocks, take the
+exclusive running prefix (the decoupled-lookback analogue — no second
+global pass), rank every tag inside its block, and emit each symbol's
+*column-relative* destination in a single sweep:
+
+    rel[i] = (# earlier symbols with the same column tag)
+
+All per-step work is a handful of wide vector ops on a 3D one-hot
+(``(block_rows, block_tags, n_cols+1)``), never a per-column loop, so cost
+is independent of schema width up to VMEM.  The column axis is tiny
+(≤ a few dozen) and rides the trailing one-hot dimension.
+
+What stays in XLA glue (``ops.partition_tags``): turning the carry's final
+value into global column starts (an ``n_cols+1``-sized exclusive cumsum),
+``dest = start[tag] + rel``, and the one global scatter that materialises
+the permutation — TPU vector lanes cannot scatter to HBM per-lane, so the
+irregular write is the one step the kernel cannot own (same division of
+labour as the CSS gather in ``kernels.numparse``).
+
+Shape contract: ``tags (NB, BN) int32`` with NB a multiple of
+``block_rows``; callers pad with the sentinel column ``n_cols`` (inert:
+trailing sentinel padding ranks past every real sentinel symbol).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Tags per partition block (the paper's thread-block tile).
+DEFAULT_BLOCK_TAGS = 256
+#: Blocks per grid step (bench-tuned with DEFAULT_BLOCK_TAGS against the
+#: jnp impls at yelp/taxi sizes — smaller blocks keep the one-hot cumsum
+#: cheap, more rows per step amortise dispatch; BENCH_parser.json).
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _onehot(tags, n_parts):
+    """``(BR, BN, n_parts) int32`` column one-hot — one dense 3D op, not a
+    per-column loop, so the work stays a handful of wide vector ops however
+    many columns the schema has (scatter2's structure, VMEM-resident)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, tags.shape + (n_parts,), 2)
+    return (tags[:, :, None] == cols).astype(jnp.int32)
+
+
+def _make_partition_kernel(n_parts: int, block_rows: int, block_tags: int):
+    def kernel(tags_ref, rel_ref, count_ref, carry_ref):
+        # carry_ref (1, n_parts) VMEM scratch: per-column count of all tags
+        # in earlier grid steps.  Grids run sequentially on TPU (and in the
+        # interpreter), which is what makes the single-pass scan sound.
+        @pl.when(pl.program_id(0) == 0)
+        def _():
+            carry_ref[...] = jnp.zeros((1, n_parts), jnp.int32)
+
+        tags = tags_ref[...]                          # (BR, BN)
+        onehot = _onehot(tags, n_parts)               # (BR, BN, C+1)
+        block_hist = jnp.sum(onehot, axis=1)          # (BR, C+1)
+        # Exclusive running count per column at each block: earlier grid
+        # steps (carry) + earlier blocks within this step.
+        block_excl = (jnp.cumsum(block_hist, axis=0) - block_hist
+                      + carry_ref[...])               # (BR, C+1)
+        # Stable intra-block rank: exclusive prefix along the tag axis,
+        # selected at each tag's own column.
+        ranks = jnp.cumsum(onehot, axis=1) - onehot   # (BR, BN, C+1)
+        own_rank = jnp.sum(ranks * onehot, axis=2)    # (BR, BN)
+        own_excl = jnp.einsum("rnc,rc->rn", onehot, block_excl)
+        rel_ref[...] = own_excl + own_rank
+
+        carry_ref[...] += jnp.sum(block_hist, axis=0, keepdims=True)
+        count_ref[...] = carry_ref[...]               # last step's write wins
+
+    return kernel
+
+
+def partition_blocks(
+    tags: jax.Array,
+    n_cols: int,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+):
+    """``(NB, BN) int32`` blocked tags → column-relative destinations
+    ``(NB, BN) int32`` plus total per-column counts ``(n_cols+1,) int32``
+    (sentinel drop column included)."""
+    nb, bn = tags.shape
+    br = min(block_rows, nb)
+    if nb % br:
+        raise ValueError(f"blocks {nb} not a multiple of block_rows {br}")
+    n_parts = n_cols + 1
+    kernel = _make_partition_kernel(n_parts, br, bn)
+    rel, count = pl.pallas_call(
+        kernel,
+        grid=(nb // br,),
+        in_specs=[pl.BlockSpec((br, bn), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, bn), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_parts), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bn), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_parts), jnp.int32),
+        ],
+        scratch_shapes=[pltpu_vmem((1, n_parts), jnp.int32)],
+        interpret=interpret,
+    )(tags)
+    return rel, count[0]
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch spec; the deferred import keeps ``pallas.tpu`` off the
+    module-import path (it is only touched when a kernel is actually built).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the partition kernels.
+
+``core.partition.partition_scatter2`` is the structural twin (two-level
+counting pass: per-block histogram → inter-block scan → intra-block
+ranks); any stable partition impl is a behavioural oracle because the
+stable permutation is unique.
+"""
+from __future__ import annotations
+
+from repro.core import partition as partition_mod
+
+
+def partition_tags(col_tag, n_cols) -> partition_mod.Partitioned:
+    """Same contract as ``ops.partition_tags``."""
+    return partition_mod.partition_scatter2(col_tag, n_cols)

@@ -33,6 +33,9 @@ def build_parser(name: str, backend: str = "reference") -> Parser:
     return Parser(ParserConfig(
         dfa=make_csv_dfa(), schema=GOLDEN_SCHEMAS[name],
         max_records=32, chunk_size=64, backend=backend,
+        # pin the radix partition kernel on pallas so golden regressions
+        # cover the kernel path (interpret-mode "auto" picks the jnp pass)
+        partition_impl="kernel" if backend == "pallas" else "auto",
     ))
 
 

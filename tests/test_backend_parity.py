@@ -66,7 +66,12 @@ def _pair(dfa_name, **kw):
     kw.setdefault("chunk_size", 16)
     cfgs = {
         be: ParserConfig(dfa=DFAS[dfa_name](), schema=SCHEMAS[dfa_name],
-                         backend=be, **kw)
+                         backend=be,
+                         # pin the radix partition *kernel* on the pallas
+                         # side (under interpret=True "auto" would pick the
+                         # jnp pass) so parity covers the whole kernel path
+                         partition_impl="kernel" if be == "pallas" else "auto",
+                         **kw)
         for be in ("reference", "pallas")
     }
     return Parser(cfgs["reference"]), Parser(cfgs["pallas"])
@@ -126,7 +131,8 @@ def test_distributed_parity():
     shards = {}
     for be in ("reference", "pallas"):
         cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMAS["csv"],
-                           max_records=64, chunk_size=16, backend=be)
+                           max_records=64, chunk_size=16, backend=be,
+                           partition_impl="kernel" if be == "pallas" else "auto")
         chunks = Parser(cfg).prepare(data)
         shards[be] = DistributedParser(cfg, mesh).parse_chunks(jnp.asarray(chunks))
     r, q = shards["reference"], shards["pallas"]

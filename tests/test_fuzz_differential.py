@@ -177,7 +177,11 @@ def parsers():
     return {
         be: Parser(ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA,
                                 max_records=MAX_RECORDS, chunk_size=64,
-                                backend=be))
+                                backend=be,
+                                # pin the radix partition kernel on pallas so
+                                # the fuzz sweep covers the kernel path
+                                # (interpret-mode "auto" picks the jnp pass)
+                                partition_impl="kernel" if be == "pallas" else "auto"))
         for be in ("reference", "pallas")
     }
 

@@ -179,6 +179,136 @@ def test_numparse_date(rng, rows, block):
 
 
 # ---------------------------------------------------------------------------
+# numparse — fused gather+convert variants
+# ---------------------------------------------------------------------------
+
+def _pack_css(strs):
+    """Concatenate field strings into a CSS + (offset, length) index."""
+    lens = np.asarray([len(s) for s in strs], np.int32)
+    offs = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+    css = np.frombuffer("".join(strs).encode(), np.uint8)
+    if css.size == 0:
+        css = np.zeros(1, np.uint8)
+    return jnp.asarray(css), jnp.asarray(offs), jnp.asarray(lens)
+
+
+def _fused_cases(rng, rows):
+    ints, floats, dates = [], [], []
+    for _ in range(rows):
+        u = rng.random()
+        if u < 0.15:
+            junk = rng.choice(["", "x1y", "+", ".", "1e", "9" * 12, "2024-13-01"])
+            ints.append(junk); floats.append(junk); dates.append(junk)
+            continue
+        ints.append(str(int(rng.integers(-(2**33), 2**33))))
+        floats.append(f"{rng.normal() * 10.0 ** int(rng.integers(-6, 7)):.6g}")
+        y, m, d = rng.integers(1970, 2038), rng.integers(1, 13), rng.integers(1, 32)
+        dates.append(f"{y:04d}-{m:02d}-{d:02d}" if rng.random() < 0.5 else
+                     f"{y:04d}-{m:02d}-{d:02d} {rng.integers(0,24):02d}:"
+                     f"{rng.integers(0,60):02d}:{rng.integers(0,60):02d}")
+    return ints, floats, dates
+
+
+@pytest.mark.parametrize("rows,block", [(500, 128), (512, 512), (33, 16)])
+def test_numparse_fused_matches_unfused_and_typeconv(rows, block):
+    """The fused (css, offset, length) kernels are bit-identical to the
+    unfused gather+kernel path AND to the jnp typeconv oracle — value,
+    valid and empty alike."""
+    from repro.core import typeconv
+    from repro.kernels.numparse import ops as k_ops
+    # local generator: the session `rng` fixture's stream is order-sensitive
+    ints, floats, dates = _fused_cases(np.random.default_rng(rows + block), rows)
+    cases = [
+        (ints, k_ops.parse_int_column_fused, k_ops.parse_int_column,
+         lambda c, o, l: typeconv.parse_int(c, o, l, width=11)),
+        (floats, k_ops.parse_float_column_fused, k_ops.parse_float_column,
+         lambda c, o, l: typeconv.parse_float(c, o, l, width=24)),
+        (dates, k_ops.parse_date_column_fused, k_ops.parse_date_column,
+         typeconv.parse_date),
+    ]
+    for strs, fused, unfused, oracle in cases:
+        css, offs, lens = _pack_css(strs)
+        got = fused(css, offs, lens, block_rows=block)
+        # vs the unfused kernel: bit-identical on everything (shared arith).
+        want = unfused(css, offs, lens, block_rows=block)
+        for f in ("value", "valid", "empty"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+                err_msg=f"{fused.__name__} vs unfused: {f}")
+        # vs typeconv: valid/empty exact; values where valid (the garbage
+        # value of an *invalid* field is unspecified across Horner variants
+        # — stages.materialize normalises it to 0 before anyone sees it).
+        ref = oracle(css, offs, lens)
+        np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(ref.valid),
+                                      err_msg=f"{fused.__name__} vs typeconv: valid")
+        np.testing.assert_array_equal(np.asarray(got.empty), np.asarray(ref.empty),
+                                      err_msg=f"{fused.__name__} vs typeconv: empty")
+        ok = np.asarray(got.valid)
+        np.testing.assert_array_equal(np.asarray(got.value)[ok],
+                                      np.asarray(ref.value)[ok],
+                                      err_msg=f"{fused.__name__} vs typeconv: value")
+
+
+def test_numparse_fused_field_at_css_end():
+    """Fields touching the last CSS byte must not read out of bounds (the
+    fused kernels width-pad the buffer; the unfused gather clamps)."""
+    from repro.kernels.numparse import ops as k_ops
+    strs = ["123", "-45", "678"]
+    css, offs, lens = _pack_css(strs)
+    got = k_ops.parse_int_column_fused(css, offs, lens)
+    want = k_ops.parse_int_column(css, offs, lens)
+    for f in ("value", "valid", "empty"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)))
+
+
+def _gathers_outside_pallas(jaxpr, acc=None):
+    """Collect gather eqns reachable without descending into pallas_call."""
+    acc = [] if acc is None else acc
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        if eqn.primitive.name == "gather":
+            acc.append(eqn)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    _gathers_outside_pallas(inner, acc)
+    return acc
+
+
+def test_numparse_fused_issues_no_xla_gather():
+    """Acceptance bar for the fusion: between the field index and type
+    conversion the pallas backend issues no XLA-level take/gather — the
+    fused kernels own the CSS indexing.  The unfused path is the positive
+    control proving the detector sees the gather it is supposed to kill."""
+    import jax
+    from repro.core import ParserConfig, Schema, get_backend, make_csv_dfa
+
+    be = get_backend("pallas")
+    css = jnp.zeros(257, jnp.uint8)
+    off = jnp.zeros(64, jnp.int32)
+    ln = jnp.zeros(64, jnp.int32)
+    schema = Schema.of(("i", "int32"), ("f", "float32"), ("d", "date"))
+
+    fused_cfg = ParserConfig(dfa=make_csv_dfa(), schema=schema, max_records=64,
+                             backend="pallas", fuse_typeconv=True)
+    for dtype in ("int32", "float32", "date"):
+        jx = jax.make_jaxpr(
+            lambda c, o, l: be.parse_field[dtype](c, o, l, fused_cfg)
+        )(css, off, ln)
+        assert not _gathers_outside_pallas(jx.jaxpr), dtype
+
+    unfused_cfg = ParserConfig(dfa=make_csv_dfa(), schema=schema, max_records=64,
+                               backend="pallas", fuse_typeconv=False)
+    jx = jax.make_jaxpr(
+        lambda c, o, l: be.parse_field["int32"](c, o, l, unfused_cfg)
+    )(css, off, ln)
+    assert _gathers_outside_pallas(jx.jaxpr)  # detector sanity check
+
+
+# ---------------------------------------------------------------------------
 # flashattn
 # ---------------------------------------------------------------------------
 
