@@ -22,6 +22,47 @@ Standalone CLI::
 
 All wall-clock on the CPU backend (this container's "device"); the TPU-
 projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
+
+``BENCH_parser.json`` schema (one object per run)::
+
+    {
+      "meta": {
+        "interpret": bool,        # Pallas interpret mode (always true on CPU)
+        "n_records_base": int     # --records (taxi runs 4x this)
+      },
+      "workloads": {
+        "<yelp|taxi>": {
+          "n_records": int,       # records in the generated input
+          "bytes": int,           # raw input size
+          "outputs_match": bool,  # every variant bit-identical to the first
+          "variants": {
+            "<label>": {          # VARIANTS key, e.g. "pallas/fused"
+              "us_per_call": float,       # best-of e2e parse wall clock
+              "materialize_us": float,    # best-of materialize-stage-only
+              "gbps": float,              # bytes / us_per_call
+              "records": int,             # records the parse reported
+              "partition_impl": str,      # resolved (never "auto")
+              "fuse_typeconv": bool,
+              "typeconv_path": str        # reference | unfused |
+            }                             # fused-windowed | fused-wholecss
+          },
+          "fused_vs_unfused": {           # pallas/fused vs pallas/unfused,
+            "speedup": float,             # materialize_us ratio (unfused/
+            "no_slower": bool             # fused); the PR-3 fusion metric
+          },
+          "windowed_vs_wholecss": {       # pallas/fused vs pallas/
+            "speedup": float,             # fused-wholecss, same ratio; the
+            "no_slower": bool             # window-DMA accountability metric
+          }
+        }
+      }
+    }
+
+``no_slower`` allows a 5% timing-noise margin.  On this interpret-mode
+container the windowed-vs-wholecss ratio measures plan+cond overhead only —
+the VMEM-capacity win the windows buy exists only on real hardware, where
+the whole-CSS variant stops fitting at ~16 MB/core and this ratio becomes
+the difference between parsing and not parsing.
 """
 from __future__ import annotations
 
@@ -41,24 +82,28 @@ from repro.core.streaming import StreamingParser
 N_YELP = 2000    # ~1.3 MB
 N_TAXI = 8000    # ~0.7 MB
 
-#: materialize_sweep variants: label → (backend, partition_impl, fuse_typeconv).
-#: ``pallas/fused`` is the backend-default fused materialization path
-#: (partition "auto" + fused gather+convert kernels — what every driver
-#: runs); ``pallas/unfused`` is the pre-fusion pallas path (jnp scatter
-#: partition + XLA-gather typeconv) it must not regress against; the rest
-#: sweep the partition impls, the radix *kernel* included (on this
-#: interpret-mode container the kernel is a correctness datapoint — "auto"
-#: resolves to it only on real hardware).
+#: materialize_sweep variants: label → (backend, partition_impl,
+#: fuse_typeconv, window_rows).  ``pallas/fused`` is the backend-default
+#: fused materialization path (partition "auto" + *windowed* fused
+#: gather+convert kernels — what every driver runs);
+#: ``pallas/fused-wholecss`` pins the pre-window fused kernels (whole CSS
+#: in VMEM — the windowed path's baseline, and on real hardware the
+#: VMEM-capped variant); ``pallas/unfused`` is the pre-fusion pallas path
+#: (jnp scatter partition + XLA-gather typeconv) the fusion must not
+#: regress against; the rest sweep the partition impls, the radix *kernel*
+#: included (on this interpret-mode container the kernel is a correctness
+#: datapoint — "auto" resolves to it only on real hardware).
 VARIANTS = {
-    "reference/scatter": ("reference", "scatter", True),
-    "reference/argsort": ("reference", "argsort", True),
-    "reference/scatter2": ("reference", "scatter2", True),
-    "pallas/fused": ("pallas", "auto", True),
-    "pallas/unfused": ("pallas", "scatter", False),
-    "pallas/kernel+fused": ("pallas", "kernel", True),
-    "pallas/scatter+fused": ("pallas", "scatter", True),
-    "pallas/argsort+fused": ("pallas", "argsort", True),
-    "pallas/scatter2+fused": ("pallas", "scatter2", True),
+    "reference/scatter": ("reference", "scatter", True, 0),
+    "reference/argsort": ("reference", "argsort", True, 0),
+    "reference/scatter2": ("reference", "scatter2", True, 0),
+    "pallas/fused": ("pallas", "auto", True, 0),
+    "pallas/fused-wholecss": ("pallas", "auto", True, -1),
+    "pallas/unfused": ("pallas", "scatter", False, 0),
+    "pallas/kernel+fused": ("pallas", "kernel", True, 0),
+    "pallas/scatter+fused": ("pallas", "scatter", True, 0),
+    "pallas/argsort+fused": ("pallas", "argsort", True, 0),
+    "pallas/scatter2+fused": ("pallas", "scatter2", True, 0),
 }
 
 
@@ -156,11 +201,11 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
         data = dataset(kind, n)
         entry = {"n_records": n, "bytes": len(data), "variants": {}}
         results, parsers, best = {}, {}, {}
-        for label, (backend, impl, fuse) in VARIANTS.items():
+        for label, (backend, impl, fuse, window_rows) in VARIANTS.items():
             if backend not in backends:
                 continue
             p = mk(max_records=1 << 12, backend=backend, partition_impl=impl,
-                   fuse_typeconv=fuse)
+                   fuse_typeconv=fuse, window_rows=window_rows)
             chunks = jnp.asarray(p.prepare(data))
             for _ in range(2):  # compile + warm
                 jax.block_until_ready(p.parse_chunks(chunks))
@@ -186,6 +231,7 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
                 "records": int(out.validation.n_records),
                 "partition_impl": plan.partition_impl,
                 "fuse_typeconv": p.cfg.fuse_typeconv,
+                "typeconv_path": plan.typeconv_path,
             }
             emit(f"materialize/{kind}/{label}", dt * 1e6,
                  f"{gbps(len(data), dt):.3f}GB/s;records={int(out.validation.n_records)}")
@@ -225,6 +271,20 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
                 "no_slower": bool(tf <= tu * 1.05),  # 5% timing-noise margin
             }
             emit(f"materialize/{kind}/fused_speedup", 0.0, f"{tu / tf:.3f}x")
+        # The window-DMA accountability metric: the windowed default vs the
+        # pre-window whole-CSS-in-VMEM fused kernels.  On interpret-mode CPU
+        # this prices the plan+cond overhead; on real hardware the wholecss
+        # variant caps per-parse CSS at VMEM capacity and the windowed path
+        # is what keeps scaling.
+        wholecss = "pallas/fused-wholecss"
+        if fused in entry["variants"] and wholecss in entry["variants"]:
+            tf = entry["variants"][fused]["materialize_us"]
+            tw = entry["variants"][wholecss]["materialize_us"]
+            entry["windowed_vs_wholecss"] = {
+                "speedup": tw / tf,
+                "no_slower": bool(tf <= tw * 1.05),  # 5% timing-noise margin
+            }
+            emit(f"materialize/{kind}/windowed_vs_wholecss", 0.0, f"{tw / tf:.3f}x")
         report["workloads"][kind] = entry
 
     if json_path:

@@ -4,8 +4,10 @@ on-device with ParPaRaw and read back Arrow-layout columns.
     PYTHONPATH=src python examples/quickstart.py [--backend pallas]
 
 ``--backend pallas`` runs the Pallas kernel path (DFA-scan, radix partition
-and fused gather+convert kernels, in interpret mode on CPU hosts) instead
-of the jnp reference — the outputs are bit-identical.
+and windowed fused gather+convert kernels, in interpret mode on CPU hosts)
+instead of the jnp reference — the outputs are bit-identical.  See the
+top-level README.md for the backend matrix and docs/ARCHITECTURE.md for the
+paper→module map.
 """
 import argparse
 import sys

@@ -36,10 +36,15 @@ Backends:
     explicitly); and int32/float32/date columns convert
     inside *fused gather+convert* ``numparse`` kernels that index the CSS
     in-kernel — no XLA ``take``/gather between the field index and
-    conversion (``cfg.fuse_typeconv=False`` restores the unfused
-    gather+kernel path for comparison; ``str`` stays the shared no-op —
-    strings live in the CSS and need no arithmetic).  ``cfg.interpret`` /
-    ``cfg.block_chunks`` carry the kernel knobs.
+    conversion.  The fused kernels are *windowed* by default: each row
+    block DMAs only its contiguous CSS window into VMEM (offsets within a
+    column are sorted), so per-parse input is not capped by VMEM capacity;
+    ``cfg.window_rows`` / ``cfg.max_window_bytes`` size the windows,
+    ``window_rows=-1`` pins the whole-CSS kernels, and
+    ``cfg.fuse_typeconv=False`` restores the unfused gather+kernel path
+    for comparison (``str`` stays the shared no-op — strings live in the
+    CSS and need no arithmetic).  ``cfg.interpret`` / ``cfg.block_chunks``
+    carry the kernel knobs.
 
 Stage functions receive the ``ParserConfig`` duck-typed (``cfg.dfa``,
 ``cfg.interpret``, ``cfg.block_chunks``, ``cfg.int_width``) so kernel knobs
@@ -86,7 +91,11 @@ class ParseBackend:
 
     ``partition_impls`` / ``default_partition_impl`` are static metadata the
     planning layer uses to resolve ``ParserConfig.partition_impl="auto"``
-    and to fail fast on impls the backend does not implement.
+    and to fail fast on impls the backend does not implement;
+    ``typeconv_path`` names the conversion strategy the config resolves to
+    (``reference`` / ``unfused`` / ``fused-windowed`` / ``fused-wholecss``)
+    so plans and benchmark reports can label it without re-deriving the
+    backend's dispatch logic.
     """
 
     name: str
@@ -96,6 +105,7 @@ class ParseBackend:
     parse_field: Dict[str, Callable]
     partition_impls: Tuple[str, ...]
     default_partition_impl: Callable  # (cfg) -> impl name ("auto" resolution)
+    typeconv_path: Callable = lambda cfg: "reference"  # (cfg) -> path label
 
 
 BACKENDS: Dict[str, ParseBackend] = {}
@@ -246,28 +256,52 @@ def _fuse(cfg) -> bool:
     return getattr(cfg, "fuse_typeconv", True)
 
 
+def _window_kw(cfg) -> Dict[str, int]:
+    """Windowed-DMA knobs for the fused numparse path (see ParserConfig)."""
+    return dict(window_rows=getattr(cfg, "window_rows", 0),
+                window_bytes=getattr(cfg, "max_window_bytes", 0))
+
+
 def _pl_parse_int(css, offset, length, cfg) -> typeconv_mod.Parsed:
     from repro.kernels.numparse import ops as numparse_ops
 
-    fn = (numparse_ops.parse_int_column_fused if _fuse(cfg)
-          else numparse_ops.parse_int_column)
-    return fn(css, offset, length, width=cfg.int_width, interpret=cfg.interpret)
+    if not _fuse(cfg):
+        return numparse_ops.parse_int_column(
+            css, offset, length, width=cfg.int_width, interpret=cfg.interpret)
+    return numparse_ops.parse_int_column_fused(
+        css, offset, length, width=cfg.int_width, interpret=cfg.interpret,
+        **_window_kw(cfg))
 
 
 def _pl_parse_float(css, offset, length, cfg) -> typeconv_mod.Parsed:
     from repro.kernels.numparse import ops as numparse_ops
 
-    fn = (numparse_ops.parse_float_column_fused if _fuse(cfg)
-          else numparse_ops.parse_float_column)
-    return fn(css, offset, length, width=cfg.float_width, interpret=cfg.interpret)
+    if not _fuse(cfg):
+        return numparse_ops.parse_float_column(
+            css, offset, length, width=cfg.float_width, interpret=cfg.interpret)
+    return numparse_ops.parse_float_column_fused(
+        css, offset, length, width=cfg.float_width, interpret=cfg.interpret,
+        **_window_kw(cfg))
 
 
 def _pl_parse_date(css, offset, length, cfg) -> typeconv_mod.Parsed:
     from repro.kernels.numparse import ops as numparse_ops
 
-    fn = (numparse_ops.parse_date_column_fused if _fuse(cfg)
-          else numparse_ops.parse_date_column)
-    return fn(css, offset, length, interpret=cfg.interpret)
+    if not _fuse(cfg):
+        return numparse_ops.parse_date_column(
+            css, offset, length, interpret=cfg.interpret)
+    return numparse_ops.parse_date_column_fused(
+        css, offset, length, interpret=cfg.interpret, **_window_kw(cfg))
+
+
+def _pl_typeconv_path(cfg) -> str:
+    if not _fuse(cfg):
+        return "unfused"
+    from repro.kernels.numparse import ops as numparse_ops
+
+    if getattr(cfg, "window_rows", 0) == numparse_ops.WHOLE_CSS:
+        return "fused-wholecss"
+    return "fused-windowed"
 
 
 PALLAS = register_backend(ParseBackend(
@@ -288,4 +322,5 @@ PALLAS = register_backend(ParseBackend(
     # strictly faster — the kernel stays selectable (partition_impl="kernel")
     # and is pinned bit-identical by the parity/fuzz/golden suites.
     default_partition_impl=lambda cfg: "scatter2" if cfg.interpret else "kernel",
+    typeconv_path=_pl_typeconv_path,
 ))

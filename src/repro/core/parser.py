@@ -60,6 +60,78 @@ class Schema:
 
 @dataclasses.dataclass(frozen=True)
 class ParserConfig:
+    """Static parse-pipeline configuration, baked into the jitted closure.
+
+    Every knob is hashable config resolved at construction time
+    (``__post_init__`` runs ``stages.plan_materialize`` so typos fail fast,
+    before any tracing).  Knobs:
+
+    ``dfa``
+        The format automaton (``make_csv_dfa`` / ``make_log_dfa`` / …):
+        byte→group table, transition table, symbol classes (paper §3.1).
+    ``schema``
+        Column names, dtypes (``int32`` / ``float32`` / ``date`` / ``str``)
+        and selection flags.  Deselected columns are dropped at tagging
+        (paper §4.3) and never partake in partitioning or conversion.
+    ``max_records``
+        Field-index capacity per parse: the ``(n_cols, max_records)``
+        offset/length matrices are statically this wide.  Records beyond it
+        flag ``validation.truncated``.
+    ``chunk_size``
+        Bytes per chunk in the §3.1 DFA sweep.  Inputs are padded to whole
+        chunks; one chunk is the granularity of the transition-vector scan.
+    ``tagging``
+        §3.2/§4.1 tagging-output layout: ``tagged`` (per-symbol
+        record+column tags, the default), ``inline`` (terminator bytes kept
+        inline in the CSS) or ``vector`` (separate terminator bit vector).
+    ``partition_impl``
+        §3.3 stable-partition implementation: ``auto`` (backend-resolved —
+        see ``backends.default_partition_impl``), ``argsort``, ``scatter``,
+        ``scatter2`` (jnp radix variants) or ``kernel`` (single-pass Pallas
+        radix kernel, pallas backend only).
+    ``use_matmul_scan``
+        §3.1 composite scan as one-hot matmuls instead of gathers (the
+        paper's SpMV formulation; useful where gathers are slow).
+    ``int_width`` / ``float_width``
+        Fixed conversion widths (bytes incl. sign) for int32/float32
+        fields.  Fields longer than the width fail conversion (``valid``
+        clears) — they also bound the fused kernels' per-field reads.
+    ``validate_columns``
+        §4.3 validation: require every record to have exactly
+        ``schema.n_cols`` columns.
+    ``backend``
+        Stage-implementation bundle: ``reference`` (pure jnp oracle) or
+        ``pallas`` (TPU kernels); see ``core/backends.py``.  The registry
+        is open — third-party backends register under new names.
+    ``interpret``
+        Run Pallas kernels in interpret mode (exact, op-by-op; the only
+        mode on CPU containers/CI).  Also steers ``partition_impl="auto"``.
+    ``block_chunks``
+        Chunks per Pallas grid step in the §3.1 DFA-scan kernels.
+    ``fuse_typeconv``
+        pallas: convert typed columns in fused gather+convert kernels that
+        index the CSS in-kernel (no XLA gather, no ``(R, W)`` byte-matrix
+        round-trip).  ``False`` restores the unfused XLA-gather +
+        arithmetic-kernel path — the fusion's escape hatch and benchmark
+        baseline.
+    ``window_rows``
+        pallas fused path: rows per CSS-window DMA block.  ``0`` uses the
+        numparse kernel default (512); ``-1`` disables windowing and pins
+        the whole-CSS-in-VMEM fused kernels (pre-window behaviour, capped
+        at VMEM capacity on real hardware — kept as the windowed path's
+        benchmark baseline).  Any positive value trades VMEM footprint
+        (smaller windows) against grid overhead (more steps).
+    ``max_window_bytes``
+        pallas fused path: static CSS window tile in bytes.  ``0``
+        auto-sizes from ``window_rows`` and the dtype's width (enough for
+        every field ≤ width plus a terminator per row); explicit values are
+        rounded up to the 128-byte lane alignment.  Columns whose fields
+        overflow the tile (a mega-field) fall back at run time — to the
+        whole-CSS fused kernel while the CSS is statically small, else to
+        per-row windows — so the fallback never compiles an
+        unbounded-VMEM kernel either.
+    """
+
     dfa: Dfa
     schema: Schema
     max_records: int
@@ -76,9 +148,14 @@ class ParserConfig:
     block_chunks: int = backends_mod.DEFAULT_BLOCK_CHUNKS
     fuse_typeconv: bool = True       # pallas: fused gather+convert kernels
                                      # (False = XLA gather + arithmetic kernel)
+    window_rows: int = 0             # pallas fused: rows per CSS-window DMA
+                                     # (0 = kernel default, -1 = whole CSS)
+    max_window_bytes: int = 0        # pallas fused: static window tile bytes
+                                     # (0 = auto-size from window_rows+width)
 
     def __post_init__(self):
-        # fail fast on typos: backend name + partition impl resolution
+        # fail fast on typos: backend name + partition impl resolution +
+        # window-knob ranges
         stages_mod.plan_materialize(self, backends_mod.get_backend(self.backend))
 
     @property

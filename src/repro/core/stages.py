@@ -26,7 +26,11 @@ the plan through and receive a :class:`ColumnBatch` plus converted values.
 On ``backend="pallas"`` the partition runs the two-pass radix kernel
 (``kernels.partition``) and every typed column converts in a fused
 gather+convert kernel (``kernels.numparse``) that indexes the CSS in-kernel
-— no XLA ``take``/gather between the field index and conversion.
+— no XLA ``take``/gather between the field index and conversion.  The
+fused kernels DMA one contiguous CSS *window* per row block (sorted
+offsets make windows contiguous; ``cfg.window_rows`` /
+``cfg.max_window_bytes``), so VMEM never holds the whole CSS and per-parse
+input size is unbounded by VMEM capacity; see ``docs/ARCHITECTURE.md``.
 
 Driver-specific glue stays in the drivers: the cross-device prefix scans of
 ``DistributedParser`` plug in via ``prefix_fn`` / ``chunk_offsets`` without
@@ -85,6 +89,8 @@ class MaterializePlan(NamedTuple):
     max_records: int
     selected: Optional[Tuple[bool, ...]]        # None = every column selected
     convert: Tuple[Tuple[str, int, str], ...]   # (name, schema index, dtype)
+    typeconv_path: str = "reference"            # reference | unfused |
+                                                # fused-windowed | fused-wholecss
 
 
 def plan_materialize(cfg, backend: ParseBackend, *, convert: bool = True
@@ -95,9 +101,14 @@ def plan_materialize(cfg, backend: ParseBackend, *, convert: bool = True
     (on ``pallas``: the radix kernel when compiling for real hardware, the
     jit-fused jnp radix pass under ``interpret=True``); explicit impls are
     validated against ``backend.partition_impls`` so typos and
-    backend-foreign impls fail at config time, not under jit.  With
-    ``convert=False`` the plan builds the CSS + field index only (the
-    distributed driver's per-shard contract).
+    backend-foreign impls fail at config time, not under jit.  The
+    windowed-DMA knobs (``cfg.window_rows`` / ``cfg.max_window_bytes``,
+    pallas fused path) are range-checked here for the same reason, and the
+    resolved conversion strategy is recorded as ``plan.typeconv_path``
+    (``reference`` / ``unfused`` / ``fused-windowed`` / ``fused-wholecss``)
+    so benchmarks and debug output can name the path a config actually
+    runs.  With ``convert=False`` the plan builds the CSS + field index
+    only (the distributed driver's per-shard contract).
     """
     impl = cfg.partition_impl
     if impl == "auto":
@@ -106,6 +117,17 @@ def plan_materialize(cfg, backend: ParseBackend, *, convert: bool = True
         raise ValueError(
             f"partition_impl {impl!r} not supported by backend "
             f"{backend.name!r}; available: {backend.partition_impls}"
+        )
+    window_rows = getattr(cfg, "window_rows", 0)
+    if window_rows < -1:
+        raise ValueError(
+            f"window_rows must be ≥ -1 (-1 = whole-CSS fused kernels, "
+            f"0 = kernel default), got {window_rows}"
+        )
+    max_window_bytes = getattr(cfg, "max_window_bytes", 0)
+    if max_window_bytes < 0:
+        raise ValueError(
+            f"max_window_bytes must be ≥ 0 (0 = auto-size), got {max_window_bytes}"
         )
     selected = None
     if not all(c.selected for c in cfg.schema.columns):
@@ -123,6 +145,7 @@ def plan_materialize(cfg, backend: ParseBackend, *, convert: bool = True
         max_records=cfg.max_records,
         selected=selected,
         convert=conv,
+        typeconv_path=backend.typeconv_path(cfg),
     )
 
 

@@ -14,12 +14,31 @@ unrolled, W ≤ ~24):
     field index and conversion — the memory-movement fusion the paper's
     device pipeline relies on.  Mosaic lowers the in-kernel index as a
     VMEM dynamic gather, and the CSS block rides whole in VMEM — so on
-    real hardware the fused path also caps the per-parse CSS at VMEM
-    capacity (~16 MB/core).  Both limits share one fallback: a per-block
-    window DMA (offsets within a column are sorted, so each row block's
-    bytes live in one contiguous CSS window — ROADMAP open item); until
-    then ``fuse_typeconv=False`` is the over-capacity escape hatch.
-    Interpret mode (this container) is exact and uncapped either way.
+    real hardware this variant caps the per-parse CSS at VMEM capacity
+    (~16 MB/core).  Kept as the mega-field fallback and benchmark
+    baseline of the windowed family below.
+  * ``parse_*_fields_windowed`` — the scalable default: offsets within a
+    column are sorted after the stable partition, so each ``block_rows``
+    row block's fields live in ONE contiguous CSS window.  The op layer
+    (``ops.plan_css_windows``) precomputes a 128-byte-aligned
+    ``window_start`` per grid step plus window-relative offsets, and a
+    scalar-prefetched element-offset BlockSpec (``pl.unblocked``) DMAs
+    only that static ``window_bytes`` tile into VMEM per step.  The
+    in-kernel index then runs over the window, never the whole buffer:
+    VMEM footprint is ``O(window_bytes)`` regardless of CSS size, and the
+    dynamic gather Mosaic must lower is window-sized — the same locality
+    trick GPU decompressors use for coalesced access (Sitaridi et al.,
+    arXiv:1606.00519).  Degenerate shapes (a mega-field stretching a
+    window past its static tile, or non-monotone offsets that violate the
+    sortedness contract) are detected at plan time and the column falls
+    back via ``lax.cond`` — to the whole-CSS variant for statically small
+    CSS, else to per-row windows (``block_rows=1``, correct for arbitrary
+    offsets, still ``O(width)`` VMEM; see ``ops._fused_column``) — so
+    correctness never depends on the window invariant, and no compiled
+    kernel's VMEM block grows with the CSS.
+    Interpret mode (this container) is exact and uncapped either way;
+    ``fuse_typeconv=False`` remains the escape hatch that avoids fused
+    CSS indexing entirely.
 
 Because both families run the same arithmetic on the same live lanes, they
 are bit-identical to each other and to the jnp reference
@@ -49,12 +68,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import typeconv as typeconv_mod
 
 DEFAULT_BLOCK_ROWS = 512
 #: Gather width for date fields — ``YYYY-MM-DD HH:MM:SS`` is exactly 19 bytes.
 DATE_WIDTH = 19
+#: CSS window starts are aligned down to this many bytes (the TPU lane
+#: count) so the windowed BlockSpec DMA is lane-aligned on real hardware;
+#: window tiles are sized in multiples of it.
+WINDOW_ALIGN = 128
 _ZERO = ord("0")
 # Plain Python int: pallas kernels may not capture traced module constants.
 _I32_MAX = typeconv_mod.INT32_MAX
@@ -252,6 +276,30 @@ def _make_fused_kernel(arith, block_rows: int, width: int):
     return kernel
 
 
+def _make_windowed_kernel(arith, block_rows: int, width: int):
+    """Wrap a per-dtype arithmetic in the windowed in-kernel CSS gather.
+
+    Identical arithmetic to the fused kernel, but the first input ref holds
+    only this grid step's ``(1, window_bytes)`` CSS window (selected by the
+    scalar-prefetched element-offset BlockSpec) and the offsets arrive
+    window-relative, pre-clamped by the op layer to ``[0, WT - width]`` so
+    ``rel + w`` never leaves the tile.
+    """
+
+    def kernel(win_start_ref, win_ref, off_ref, len_ref, val_ref, ok_ref):
+        del win_start_ref  # consumed by the BlockSpec index_map only
+        win = win_ref[...][0]                      # (WT,) uint8 window
+        offs = off_ref[...][:, 0]                  # (BR,) window-relative
+        ln = len_ref[...][:, 0]                    # (BR,)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (block_rows, width), 1)
+        b = win[offs[:, None] + lane].astype(jnp.int32)  # window-sized gather
+        val, ok = arith(b, ln)
+        val_ref[...] = val[:, None]
+        ok_ref[...] = ok.astype(jnp.int32)[:, None]
+
+    return kernel
+
+
 # ---------------------------------------------------------------------------
 # pallas_call plumbing (shared by all kernels)
 # ---------------------------------------------------------------------------
@@ -315,6 +363,49 @@ def _fused_call(arith, css, offsets, lengths, width, block_rows, val_dtype,
         ],
         interpret=interpret,
     )(css_p, offs[:, None], lengths.astype(jnp.int32)[:, None])
+    return val[:, 0], ok[:, 0].astype(bool)
+
+
+def _windowed_call(arith, css, rel_off, lengths, win_start, width, block_rows,
+                   window_bytes, val_dtype, interpret):
+    """Run a windowed kernel over pre-planned windows.
+
+    ``rel_off``/``lengths`` are ``(R,)`` with ``R`` a multiple of
+    ``block_rows``; ``win_start`` is ``(R // block_rows,)`` element offsets
+    (multiples of :data:`WINDOW_ALIGN`) from :func:`ops.plan_css_windows`.
+    The CSS is tile-padded so every ``win_start + window_bytes`` slice is in
+    range; each grid step DMAs exactly one ``(1, window_bytes)`` tile.
+    """
+    r = rel_off.shape[0]
+    br = block_rows
+    if r % br:
+        raise ValueError(f"rows {r} not a multiple of block_rows {br}")
+    css_p = jnp.concatenate([css, jnp.zeros((window_bytes,), css.dtype)])[None, :]
+    kernel = _make_windowed_kernel(arith, br, width)
+    val, ok = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(r // br,),
+            in_specs=[
+                # element-offset (unblocked) window: start = win_start[i]
+                pl.BlockSpec((1, window_bytes), lambda i, ws: (0, ws[i]),
+                             indexing_mode=pl.unblocked),
+                pl.BlockSpec((br, 1), lambda i, ws: (i, 0)),
+                pl.BlockSpec((br, 1), lambda i, ws: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((br, 1), lambda i, ws: (i, 0)),
+                pl.BlockSpec((br, 1), lambda i, ws: (i, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 1), val_dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(win_start.astype(jnp.int32), css_p, rel_off.astype(jnp.int32)[:, None],
+      lengths.astype(jnp.int32)[:, None])
     return val[:, 0], ok[:, 0].astype(bool)
 
 
@@ -416,3 +507,55 @@ def parse_date_fields_fused(
     arith = lambda b, ln: _date_arith(b, ln, br)
     return _fused_call(arith, css, offsets, lengths, DATE_WIDTH, block_rows,
                        jnp.int32, interpret)
+
+
+def parse_int_fields_windowed(
+    css: jax.Array,
+    rel_offsets: jax.Array,
+    lengths: jax.Array,
+    win_start: jax.Array,
+    *,
+    width: int,
+    block_rows: int,
+    window_bytes: int,
+    interpret: bool = True,
+):
+    """Windowed twin of ``parse_int_fields_fused``: per-block window DMA
+    with window-relative offsets (see ``ops.plan_css_windows``)."""
+    arith = lambda b, ln: _int_arith(b, ln, block_rows, width)
+    return _windowed_call(arith, css, rel_offsets, lengths, win_start, width,
+                          block_rows, window_bytes, jnp.int32, interpret)
+
+
+def parse_float_fields_windowed(
+    css: jax.Array,
+    rel_offsets: jax.Array,
+    lengths: jax.Array,
+    win_start: jax.Array,
+    *,
+    width: int,
+    block_rows: int,
+    window_bytes: int,
+    interpret: bool = True,
+):
+    """Windowed twin of ``parse_float_fields_fused`` — bit-identical."""
+    arith = lambda b, ln: _float_arith(b, ln, block_rows, width)
+    return _windowed_call(arith, css, rel_offsets, lengths, win_start, width,
+                          block_rows, window_bytes, jnp.float32, interpret)
+
+
+def parse_date_fields_windowed(
+    css: jax.Array,
+    rel_offsets: jax.Array,
+    lengths: jax.Array,
+    win_start: jax.Array,
+    *,
+    block_rows: int,
+    window_bytes: int,
+    interpret: bool = True,
+):
+    """Windowed twin of ``parse_date_fields_fused`` — bit-identical."""
+    arith = lambda b, ln: _date_arith(b, ln, block_rows)
+    return _windowed_call(arith, css, rel_offsets, lengths, win_start,
+                          DATE_WIDTH, block_rows, window_bytes, jnp.int32,
+                          interpret)

@@ -4,15 +4,33 @@ Two families of field-index entry points:
 
   * ``parse_*_column_fused`` — the default ``backend="pallas"`` path
     (``cfg.fuse_typeconv=True``): hand the CSS plus ``(offset, length)``
-    straight to the fused Pallas kernel, which indexes the symbol buffer
+    straight to a fused Pallas kernel, which indexes the symbol buffer
     inside the kernel block.  No XLA ``take``/gather and no ``(R, W)``
     row-padded byte matrix between the field index and type conversion.
+    By default the fused path is *windowed*: :func:`plan_css_windows`
+    derives one contiguous, 128-byte-aligned CSS window per ``window_rows``
+    row block (offsets within a column are sorted after the stable
+    partition, so a block's fields always share a window), rebases the
+    offsets window-relative, and the kernel DMAs only a static
+    ``window_bytes`` tile per grid step — VMEM holds ``O(window_bytes)``,
+    not the whole CSS, so per-parse input size is no longer capped by
+    VMEM capacity.  When the plan detects a window the static tile cannot
+    hold (a mega-field longer than the tile) or offsets that are not
+    monotone (the sortedness contract violated by a hand-built index),
+    the column falls back under ``lax.cond`` — to the whole-CSS fused
+    kernel while the CSS is statically small
+    (:data:`WHOLECSS_FALLBACK_MAX_BYTES`), else to per-row windows
+    (``rows_per_block=1`` — correct for arbitrary offsets, still
+    ``O(width)`` VMEM), so the windowed path never *compiles* a kernel
+    whose VMEM block grows with the CSS.  Same arithmetic, same results
+    on every branch.  ``window_rows=WHOLE_CSS`` (−1) disables windowing
+    outright (the benchmark baseline for the window DMA).
   * ``parse_*_column``       — the unfused path: gather a column's field
     bytes out of the CSS with XLA's gather and hand the dense ``(R, W)``
     matrix to the arithmetic kernel.  Kept as the ``cfg.fuse_typeconv=False``
     fallback and the benchmark baseline for the fusion.
 
-Both share the per-dtype arithmetic (``numparse._*_arith``), so they are
+All share the per-dtype arithmetic (``numparse._*_arith``), so they are
 bit-identical.  Row counts that do not divide the kernel block are padded
 with zero-length fields and sliced off.
 """
@@ -26,6 +44,73 @@ import jax.numpy as jnp
 from repro.core import typeconv as typeconv_mod
 from repro.core.backends import pad_to_block
 from repro.kernels.numparse import numparse
+
+#: ``window_rows`` sentinel: disable windowing, run the whole-CSS fused
+#: kernels unconditionally (PR-3 behaviour; the windowed path's baseline).
+WHOLE_CSS = -1
+
+
+def auto_window_bytes(rows_per_block: int, width: int) -> int:
+    """Static CSS window tile (bytes) for ``rows_per_block`` fields.
+
+    Offsets of consecutive fields in one column differ by at most
+    ``field length (+1 terminator byte in the inline/vector tagging
+    modes)``, so a row block whose fields all fit ``width`` spans at most
+    ``rows_per_block * (width + 1) + width`` CSS bytes; one extra
+    :data:`numparse.WINDOW_ALIGN` granule absorbs the align-down of the
+    window start, and the total rounds up to the alignment.  Fields longer
+    than ``width`` (unparseable anyway) may exceed this and take the
+    whole-CSS fallback at run time.
+    """
+    need = rows_per_block * (width + 1) + width + numparse.WINDOW_ALIGN
+    a = numparse.WINDOW_ALIGN
+    return -(-need // a) * a
+
+
+def plan_css_windows(offset, length, *, rows_per_block: int, width: int,
+                     window_bytes: int, css_len: int):
+    """Per-block CSS window plan: ``(win_start, rel_offset, fits)``.
+
+    All jnp (traced, gather-free).  ``offset``/``length`` are ``(R,)`` with
+    ``R`` a multiple of ``rows_per_block``.  Empty fields (``length == 0``)
+    carry meaningless offsets (the field index emits 0), so each takes the
+    running maximum of the non-empty offsets before it — keeping the
+    per-block window tight and the effective offsets monotone.  Empties
+    *before* the first non-empty field seed from the column's first
+    non-empty offset (its minimum, given sortedness) rather than 0, so a
+    missing value in record 0 cannot drag an otherwise-tight window back
+    to the start of the CSS.
+
+    Returns:
+      win_start: ``(R // rows_per_block,) int32`` element offsets into the
+        CSS, aligned down to :data:`numparse.WINDOW_ALIGN`.
+      rel_offset: ``(R,) int32`` window-relative offsets, clamped to
+        ``[0, window_bytes - width]`` (the clamp only matters when ``fits``
+        is False and the windowed result is discarded).
+      fits: ``() bool`` — True iff every block's fields live inside its
+        static ``window_bytes`` tile AND non-empty offsets are monotone
+        non-decreasing (the §3.3 sortedness contract).  When False the
+        caller must use a fallback path (see ``_fused_column``).
+    """
+    r = offset.shape[0]
+    nb = r // rows_per_block
+    nonempty = length > 0
+    off_c = jnp.clip(offset.astype(jnp.int32), 0, css_len)
+    # Seed for empty rows: the first (= minimum, offsets sorted) non-empty
+    # offset, so leading empties inherit forward; css_len if all empty.
+    seed = jnp.min(jnp.where(nonempty, off_c, css_len))
+    eff = jax.lax.cummax(jnp.where(nonempty, off_c, seed))
+    monotone = jnp.all(jnp.where(nonempty, off_c == eff, True))
+    eff_blocks = eff.reshape(nb, rows_per_block)
+    a = numparse.WINDOW_ALIGN
+    win_start = (eff_blocks[:, 0] // a) * a
+    need = eff_blocks[:, -1] + width - win_start
+    fits = monotone & (jnp.max(need) <= window_bytes)
+    start_rep = jnp.broadcast_to(
+        win_start[:, None], (nb, rows_per_block)).reshape(-1)
+    rel = jnp.clip(jnp.where(nonempty, off_c, eff) - start_rep,
+                   0, window_bytes - width)
+    return win_start, rel, fits
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -97,39 +182,146 @@ def parse_date_column(css, offset, length,
 # fused gather+convert entry points (the kernel owns the CSS indexing)
 # ---------------------------------------------------------------------------
 
-def _fused_column(kernel_fn, css, offset, length, block_rows, interpret, **kw):
-    br = min(block_rows, offset.shape[0])
-    off_p, r = pad_to_block(offset.astype(jnp.int32), br, 0)
-    len_p, _ = pad_to_block(length.astype(jnp.int32), br, 0)
-    val, ok = kernel_fn(css, off_p, len_p, block_rows=br, interpret=interpret,
-                        **kw)
+def _resolve_window(window_rows, window_bytes, block_rows, width, r):
+    """Static window geometry: (rows per window block, window tile bytes)."""
+    br = min(window_rows or block_rows, r)
+    wt = window_bytes or auto_window_bytes(br, width)
+    a = numparse.WINDOW_ALIGN
+    wt = max(-(-wt // a) * a, -(-(width + a) // a) * a)  # ≥ width + align
+    return br, wt
+
+
+#: Static ceiling (bytes) for the whole-CSS *fallback* of the windowed
+#: path.  A CSS at most this big may be compiled as a single VMEM block for
+#: the mega-field/non-monotone fallback branch (fast, one grid sweep);
+#: beyond it the fallback switches to per-row windows (``rows_per_block=1``
+#: — correct for arbitrary offsets, VMEM-bounded, slower), so no kernel
+#: with an unbounded VMEM block is ever *compiled*, keeping the windowed
+#: path's VMEM usage bounded regardless of CSS size.  Well under the
+#: ~16 MB/core VMEM budget, leaving room for outputs and double-buffering.
+WHOLECSS_FALLBACK_MAX_BYTES = 4 << 20
+
+
+def _per_row_windows(css_len, offset, width):
+    """Degenerate per-row window plan: one window per field.
+
+    Each row's window depends only on its own offset — no sortedness, no
+    mega-field sensitivity (only ``width`` bytes are ever read per field) —
+    so this plan is correct for *arbitrary* ``(offset, length)`` while
+    keeping the VMEM block at ``O(width)``.  The universal fallback when
+    the CSS is too large for the whole-CSS fallback kernel.
+    """
+    a = numparse.WINDOW_ALIGN
+    wt1 = -(-(width + a) // a) * a          # align slop + width fits
+    off_c = jnp.clip(offset.astype(jnp.int32), 0, css_len)
+    ws1 = (off_c // a) * a
+    return ws1, off_c - ws1, wt1
+
+
+def _fused_column(whole_fn, windowed_fn, css, offset, length, width,
+                  block_rows, window_rows, window_bytes, interpret,
+                  wholecss_max=None):
+    """Shared fused-column body: windowed by default, bounded fallback.
+
+    ``whole_fn(css, off, len, block_rows=, interpret=)`` and
+    ``windowed_fn(css, rel, len, win_start, block_rows=, window_bytes=,
+    interpret=)`` arrive with any dtype-specific ``width`` already bound.
+    ``window_rows == WHOLE_CSS`` skips planning entirely; otherwise the
+    window plan decides at run time (``lax.cond``) between the windowed
+    kernel and a fallback for degenerate shapes (mega-fields overflowing
+    the static tile, non-monotone offsets).  The fallback itself is chosen
+    *statically* by CSS size so no unbounded-VMEM kernel is ever compiled:
+    at most ``wholecss_max`` bytes (default
+    :data:`WHOLECSS_FALLBACK_MAX_BYTES`) the whole-CSS kernel; above that,
+    per-row windows (:func:`_per_row_windows` — correct for arbitrary
+    offsets, ``O(width)`` VMEM, one grid step per field).  Every branch
+    shares the arithmetic, so the choice never changes results, only
+    footprint and speed.
+    """
+    if wholecss_max is None:
+        wholecss_max = WHOLECSS_FALLBACK_MAX_BYTES
+    r0 = offset.shape[0]
+    if r0 == 0:  # degenerate but public: no fields to convert
+        zb = jnp.zeros((0,), bool)
+        return typeconv_mod.Parsed(
+            whole_fn(css, offset, length, block_rows=block_rows,
+                     interpret=interpret)[0], zb, zb)
+    if window_rows == WHOLE_CSS:
+        br = min(block_rows, r0)
+        off_p, r = pad_to_block(offset.astype(jnp.int32), br, 0)
+        len_p, _ = pad_to_block(length.astype(jnp.int32), br, 0)
+        val, ok = whole_fn(css, off_p, len_p, block_rows=br,
+                           interpret=interpret)
+    else:
+        br, wt = _resolve_window(window_rows, window_bytes, block_rows,
+                                 width, r0)
+        off_p, r = pad_to_block(offset.astype(jnp.int32), br, 0)
+        len_p, _ = pad_to_block(length.astype(jnp.int32), br, 0)
+        win_start, rel, fits = plan_css_windows(
+            off_p, len_p, rows_per_block=br, width=width, window_bytes=wt,
+            css_len=css.shape[0],
+        )
+        if css.shape[0] + width <= wholecss_max:  # static: shapes, not data
+            fallback = lambda: whole_fn(css, off_p, len_p, block_rows=br,
+                                        interpret=interpret)
+        else:
+            ws1, rel1, wt1 = _per_row_windows(css.shape[0], off_p, width)
+            fallback = lambda: windowed_fn(css, rel1, len_p, ws1,
+                                           block_rows=1, window_bytes=wt1,
+                                           interpret=interpret)
+        val, ok = jax.lax.cond(
+            fits,
+            lambda: windowed_fn(css, rel, len_p, win_start, block_rows=br,
+                                window_bytes=wt, interpret=interpret),
+            fallback,
+        )
     val, ok = val[:r], ok[:r]
     empty = length == 0
     return typeconv_mod.Parsed(val, ok & ~empty, empty)
 
 
-@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+_FUSED_STATICS = ("width", "block_rows", "window_rows", "window_bytes",
+                  "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=_FUSED_STATICS)
 def parse_int_column_fused(css, offset, length, width: int = 11,
                            block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                           window_rows: int = 0, window_bytes: int = 0,
                            interpret: bool = True) -> typeconv_mod.Parsed:
-    """Fused equivalent of ``parse_int_column`` (bit-identical, no XLA gather)."""
-    return _fused_column(numparse.parse_int_fields_fused, css, offset, length,
-                         block_rows, interpret, width=width)
+    """Fused equivalent of ``parse_int_column`` (bit-identical, no XLA
+    gather); windowed per-block CSS DMA unless ``window_rows=WHOLE_CSS``."""
+    return _fused_column(
+        functools.partial(numparse.parse_int_fields_fused, width=width),
+        functools.partial(numparse.parse_int_fields_windowed, width=width),
+        css, offset, length, width, block_rows, window_rows, window_bytes,
+        interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=_FUSED_STATICS)
 def parse_float_column_fused(css, offset, length, width: int = 24,
                              block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                             window_rows: int = 0, window_bytes: int = 0,
                              interpret: bool = True) -> typeconv_mod.Parsed:
-    """Fused equivalent of ``parse_float_column`` (bit-identical, no XLA gather)."""
-    return _fused_column(numparse.parse_float_fields_fused, css, offset, length,
-                         block_rows, interpret, width=width)
+    """Fused equivalent of ``parse_float_column`` (bit-identical, no XLA
+    gather); windowed per-block CSS DMA unless ``window_rows=WHOLE_CSS``."""
+    return _fused_column(
+        functools.partial(numparse.parse_float_fields_fused, width=width),
+        functools.partial(numparse.parse_float_fields_windowed, width=width),
+        css, offset, length, width, block_rows, window_rows, window_bytes,
+        interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "window_rows",
+                                    "window_bytes", "interpret"))
 def parse_date_column_fused(css, offset, length,
                             block_rows: int = numparse.DEFAULT_BLOCK_ROWS,
+                            window_rows: int = 0, window_bytes: int = 0,
                             interpret: bool = True) -> typeconv_mod.Parsed:
-    """Fused equivalent of ``parse_date_column`` (bit-identical, no XLA gather)."""
-    return _fused_column(numparse.parse_date_fields_fused, css, offset, length,
-                         block_rows, interpret)
+    """Fused equivalent of ``parse_date_column`` (bit-identical, no XLA
+    gather); windowed per-block CSS DMA unless ``window_rows=WHOLE_CSS``."""
+    return _fused_column(numparse.parse_date_fields_fused,
+                         numparse.parse_date_fields_windowed,
+                         css, offset, length, numparse.DATE_WIDTH, block_rows,
+                         window_rows, window_bytes, interpret)

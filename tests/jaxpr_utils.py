@@ -1,0 +1,17 @@
+"""Shared jaxpr inspection helpers for the no-XLA-gather acceptance tests."""
+
+
+def gathers_outside_pallas(jaxpr, acc=None):
+    """Collect gather eqns reachable without descending into pallas_call."""
+    acc = [] if acc is None else acc
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        if eqn.primitive.name == "gather":
+            acc.append(eqn)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    gathers_outside_pallas(inner, acc)
+    return acc

@@ -3,6 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from jaxpr_utils import gathers_outside_pallas as _gathers_outside_pallas
 from repro.core import make_csv_dfa, make_log_dfa, make_simple_dfa
 
 # ---------------------------------------------------------------------------
@@ -262,22 +263,6 @@ def test_numparse_fused_field_at_css_end():
                                       np.asarray(getattr(want, f)))
 
 
-def _gathers_outside_pallas(jaxpr, acc=None):
-    """Collect gather eqns reachable without descending into pallas_call."""
-    acc = [] if acc is None else acc
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            continue
-        if eqn.primitive.name == "gather":
-            acc.append(eqn)
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
-                inner = getattr(sub, "jaxpr", sub)
-                if hasattr(inner, "eqns"):
-                    _gathers_outside_pallas(inner, acc)
-    return acc
-
-
 def test_numparse_fused_issues_no_xla_gather():
     """Acceptance bar for the fusion: between the field index and type
     conversion the pallas backend issues no XLA-level take/gather — the
@@ -292,13 +277,16 @@ def test_numparse_fused_issues_no_xla_gather():
     ln = jnp.zeros(64, jnp.int32)
     schema = Schema.of(("i", "int32"), ("f", "float32"), ("d", "date"))
 
-    fused_cfg = ParserConfig(dfa=make_csv_dfa(), schema=schema, max_records=64,
-                             backend="pallas", fuse_typeconv=True)
-    for dtype in ("int32", "float32", "date"):
-        jx = jax.make_jaxpr(
-            lambda c, o, l: be.parse_field[dtype](c, o, l, fused_cfg)
-        )(css, off, ln)
-        assert not _gathers_outside_pallas(jx.jaxpr), dtype
+    # default config = windowed fused path; window_rows=-1 = whole-CSS fused
+    for window_rows in (0, -1):
+        fused_cfg = ParserConfig(dfa=make_csv_dfa(), schema=schema,
+                                 max_records=64, backend="pallas",
+                                 fuse_typeconv=True, window_rows=window_rows)
+        for dtype in ("int32", "float32", "date"):
+            jx = jax.make_jaxpr(
+                lambda c, o, l: be.parse_field[dtype](c, o, l, fused_cfg)
+            )(css, off, ln)
+            assert not _gathers_outside_pallas(jx.jaxpr), (window_rows, dtype)
 
     unfused_cfg = ParserConfig(dfa=make_csv_dfa(), schema=schema, max_records=64,
                                backend="pallas", fuse_typeconv=False)
