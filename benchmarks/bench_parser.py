@@ -14,6 +14,13 @@
             CPU container the Pallas kernels run in interpret mode — the
             numbers are correctness-under-load datapoints and relative
             fused-vs-unfused comparisons, not the TPU projection.
+  * stream_sweep — the §4.4 device-resident streaming engine
+            (``StreamSession``): end-to-end GB/s for S ∈ {1, 4, 16}
+            concurrent streams, batched (one vmapped dispatch per round)
+            vs sequential (one stream at a time through a single-stream
+            session), with the batched-vs-sequential speedup and the
+            honest throughput denominators (``bytes_in`` vs
+            ``bytes_reparsed``) recorded per variant.
 
 Standalone CLI::
 
@@ -54,6 +61,37 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
             "speedup": float,             # fused-wholecss, same ratio; the
             "no_slower": bool             # window-DMA accountability metric
           }
+        },
+        "stream": {                       # §4.4 streaming-engine workload
+          "n_records_per_stream": int,    # CLI --records (reference streams;
+                                          #   pallas streams run smaller —
+                                          #   see the per-variant field)
+          "partition_bytes": int,
+          "max_carry_bytes": int,
+          "variants": {
+            "<backend>/S<K>": {           # K concurrent streams, batched
+              "s_total": float,           # end-to-end wall clock (one run,
+                                          #   after a warm-up run)
+              "gbps": float,              # sum of bytes_in / s_total — the
+                                          #   honest number: carry re-parses
+                                          #   are NOT in the numerator
+              "records": int,
+              "n_records_per_stream": int,# records actually generated per
+                                          #   stream for THIS variant
+              "bytes": int,               # total source bytes (all streams)
+              "bytes_reparsed": int,      # carry bytes parsed again (device
+                                          #   traffic = bytes + reparsed)
+              "partitions": int
+            }
+          },
+          "stream_batched_vs_sequential": {
+            "<backend>": {
+              "S<K>": {                   # batched K-stream session vs K
+                "speedup": float,         #   sequential single-stream runs
+                "outputs_match": bool     # per-partition bit-identity
+              }
+            }
+          }
         }
       }
     }
@@ -68,6 +106,7 @@ from __future__ import annotations
 
 import argparse
 import csv as pycsv
+import dataclasses
 import io
 import json
 import time
@@ -192,8 +231,7 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
     from repro.core import backends as backends_mod
     from repro.core import stages as stages_mod
 
-    report = {"meta": {"interpret": True, "n_records_base": n_records},
-              "workloads": {}}
+    report = _base_report(n_records)
     for kind, mk, n in (("yelp", yelp_parser, n_records),
                         ("taxi", taxi_parser, 4 * n_records)):
         if kind not in workloads:
@@ -292,6 +330,118 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")
     return report
+
+
+def _base_report(n_records: int) -> dict:
+    """The shared BENCH_parser.json skeleton (single definition so the
+    stream-only and materialize paths can never emit diverging meta)."""
+    return {"meta": {"interpret": True, "n_records_base": n_records},
+            "workloads": {}}
+
+
+#: Stream-workload batch sizes (concurrent tenants per dispatch).
+STREAM_S = (1, 4, 16)
+
+
+def stream_sweep(n_records=250, backends=("reference", "pallas"),
+                 partition_bytes=1 << 14, max_carry_bytes=1 << 13):
+    """§4.4 streaming-engine workload: S concurrent yelp-like streams through
+    ``StreamSession``, batched (one vmapped dispatch per round, per-stream
+    device carry) vs sequential (the same streams one at a time through a
+    single-stream session — S times the dispatches).
+
+    GB/s uses ``bytes_in`` (each source byte once) as the numerator;
+    ``bytes_reparsed`` is reported alongside so the carry-re-parse overhead
+    is visible instead of silently inflating throughput.  On this
+    interpret-mode container the pallas rows are correctness-under-load
+    datapoints (each stream gets ``n_records // 4`` records to keep the
+    sweep bounded); on real hardware the batched-vs-sequential speedup is
+    the multi-tenant scale-out metric.
+    """
+    from repro.core.streaming import StreamSession
+
+    entry = {"n_records_per_stream": n_records,
+             "partition_bytes": partition_bytes,
+             "max_carry_bytes": max_carry_bytes,
+             "variants": {}, "stream_batched_vs_sequential": {}}
+    for backend in backends:
+        n_per_stream = n_records if backend == "reference" else max(n_records // 4, 16)
+        datas = [dataset("yelp", n_per_stream, seed=s) for s in range(max(STREAM_S))]
+        ratios = {}
+        for S in STREAM_S:
+            streams = datas[:S]
+            total_bytes = sum(len(d) for d in streams)
+            # ONE session per shape, reused across warm-up and timed runs —
+            # the steady-state contract (carry resets per call, the compiled
+            # step is cached), so the timed pass holds zero compilation.
+            parser = yelp_parser(max_records=1 << 12, backend=backend)
+            sess_b = StreamSession(parser, partition_bytes,
+                                   max_carry_bytes=max_carry_bytes, n_streams=S)
+            sess_q = StreamSession(parser, partition_bytes,
+                                   max_carry_bytes=max_carry_bytes, n_streams=1)
+
+            def signature(result, n):
+                """Whole-partition fingerprint for the bit-identity check:
+                every ParseResult field, not just one column."""
+                parts = [np.int64(n)]
+                for f in ("css", "col_start", "col_count", "field_offset",
+                          "field_length", "end_state", "last_record_end"):
+                    parts.append(np.asarray(getattr(result, f)))
+                for name in sorted(result.values):
+                    for f in ("value", "valid", "empty"):
+                        parts.append(np.asarray(getattr(result.values[name], f)))
+                for f in result.validation._fields:
+                    parts.append(np.asarray(getattr(result.validation, f)))
+                return parts
+
+            def run_batched(collect=False):
+                outs = {s: [] for s in range(S)}
+                for s, result, n in sess_b.parse_streams([[d] for d in streams]):
+                    if collect:
+                        outs[s].append(signature(result, n))
+                return outs
+
+            def run_sequential(collect=False):
+                outs = {s: [] for s in range(S)}
+                for s, d in enumerate(streams):
+                    for _s, result, n in sess_q.parse_streams([[d]]):
+                        if collect:
+                            outs[s].append(signature(result, n))
+                return outs
+
+            # warm-up runs compile the steps and pin bit-identity
+            out_b = run_batched(collect=True)
+            out_q = run_sequential(collect=True)
+            match = all(
+                len(out_b[s]) == len(out_q[s])
+                and all(len(pb) == len(pq)
+                        and all(np.array_equal(a, b) for a, b in zip(pb, pq))
+                        for pb, pq in zip(out_b[s], out_q[s]))
+                for s in range(S))
+            one_run = [dataclasses.replace(st) for st in sess_b.stats]
+
+            t0 = time.perf_counter()
+            run_batched()
+            dt_b = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            run_sequential()
+            dt_q = time.perf_counter() - t0
+
+            entry["variants"][f"{backend}/S{S}"] = {
+                "s_total": dt_b,
+                "gbps": gbps(total_bytes, dt_b),
+                "records": sum(st.records for st in one_run),
+                "n_records_per_stream": n_per_stream,
+                "bytes": total_bytes,
+                "bytes_reparsed": sum(st.bytes_reparsed for st in one_run),
+                "partitions": sum(st.partitions for st in one_run),
+            }
+            ratios[f"S{S}"] = {"speedup": dt_q / dt_b, "outputs_match": bool(match)}
+            emit(f"stream/{backend}/S{S}", dt_b * 1e6,
+                 f"{gbps(total_bytes, dt_b):.3f}GB/s;batched_vs_seq="
+                 f"{dt_q / dt_b:.2f}x;match={match}")
+        entry["stream_batched_vs_sequential"][backend] = ratios
+    return entry
 
 
 def fig12_partition_size():
@@ -395,20 +545,33 @@ def main(argv=None):
     ap.add_argument("--backend", default="all",
                     choices=["all", "reference", "pallas"])
     ap.add_argument("--workload", default="all",
-                    choices=["all", "yelp", "taxi"])
+                    choices=["all", "yelp", "taxi", "stream"])
     ap.add_argument("--json", default="BENCH_parser.json", metavar="PATH",
                     help="machine-readable sweep output ('' to skip)")
     ap.add_argument("--records", type=int, default=250,
-                    help="yelp record count (taxi runs 4x this)")
+                    help="yelp record count (taxi runs 4x this; the stream "
+                         "workload runs this many records per stream)")
     ap.add_argument("--figs", action="store_true",
                     help="also run the paper-figure suites (9-13)")
     args = ap.parse_args(argv)
 
     backends = ("reference", "pallas") if args.backend == "all" else (args.backend,)
-    workloads = ("yelp", "taxi") if args.workload == "all" else (args.workload,)
+    workloads = (("yelp", "taxi", "stream") if args.workload == "all"
+                 else (args.workload,))
     print("name,us_per_call,derived")
-    materialize_sweep(n_records=args.records, backends=backends,
-                      workloads=workloads, json_path=args.json)
+    mat = tuple(w for w in workloads if w in ("yelp", "taxi"))
+    if mat:
+        report = materialize_sweep(n_records=args.records, backends=backends,
+                                   workloads=mat, json_path="")
+    else:
+        report = _base_report(args.records)
+    if "stream" in workloads:
+        report["workloads"]["stream"] = stream_sweep(
+            n_records=args.records, backends=backends)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
     if args.figs:
         fig9_chunk_size()
         fig10_input_size()

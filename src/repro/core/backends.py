@@ -21,6 +21,14 @@ swappable stage implementations:
     ``stages.materialize`` dispatches *every* selected column through this
     table, so a backend that kernelises a dtype needs no driver changes at
     all.
+  * ``prepend_carry`` / ``extract_carry`` — the §4.4 per-stream device-carry
+    state machine of the streaming engine (``core/streaming.py``): splice
+    the carried tail record in front of the fresh partition bytes, and cut
+    the new tail after ``last_record_end``.  Both default to the shared jnp
+    implementations below (pure ``where``/``roll`` masks — cheap next to
+    the parse); they are backend hooks so a future whole-pipeline-fusion
+    backend can fold the splice into its first kernel's DMA and the cut
+    into its last, without the engine changing.
 
 Backends:
 
@@ -75,6 +83,74 @@ from repro.core.dfa import PAD_BYTE
 DEFAULT_BLOCK_CHUNKS = 256
 
 
+# ---------------------------------------------------------------------------
+# shared §4.4 stream-state hooks (device carry splice / cut) — the defaults
+# every backend inherits; a fusing backend overrides them to fold the splice
+# into its first kernel's DMA and the cut into its last.
+# ---------------------------------------------------------------------------
+
+def prepend_carry_jnp(carry_buf: jax.Array, carry_len: jax.Array,
+                      fresh: jax.Array, fresh_len: jax.Array,
+                      flush: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Splice ``carry_buf[:carry_len]`` in front of ``fresh[:fresh_len]``.
+
+    All buffers are fixed-capacity ``(capacity,) uint8`` with PAD tails, so
+    the splice is two masked ``where``s over a ``roll`` — no dynamic shapes,
+    no host round-trip.  Under ``flush`` (the stream's final partition) an
+    unterminated payload gets the record delimiter appended, judged on the
+    last non-PAD byte (a PAD-only tail carries no record; paper §4.4 flush).
+
+    Returns ``(buf, total, overflow)``: the assembled partition, its byte
+    length (carry + fresh), and whether it no longer fits the capacity
+    (including the flush delimiter's slot) — the condition the host raises
+    "record longer than capacity" on, one partition behind.  Under overflow
+    the buffer contents are garbage (the roll wraps); callers must raise
+    before using them.
+    """
+    capacity = carry_buf.shape[0]
+    delim = cfg.record_delim_byte
+    pos = jnp.arange(capacity, dtype=jnp.int32)
+    total = carry_len + fresh_len
+    rolled = jnp.roll(fresh, carry_len)  # fresh payload now starts at carry_len
+    buf = jnp.where(pos < carry_len, carry_buf,
+                    jnp.where(pos < total, rolled, jnp.uint8(PAD_BYTE)))
+    # Flush: append a record delimiter so the tail record completes.  Whether
+    # one is needed is judged on the last *payload* byte (PAD bytes in the
+    # source are inert — a PAD-only tail carries no record; carry_buf beyond
+    # carry_len is PAD by the extract invariant below), but it is written at
+    # ``total`` — after any trailing source PADs — exactly where the host
+    # oracle writes it, so the two engines stay bit-identical.
+    payload = jnp.max(jnp.where(buf != PAD_BYTE, pos + 1, 0))
+    last_byte = buf[jnp.maximum(payload - 1, 0)]
+    need_delim = flush & (payload > 0) & (last_byte != delim)
+    overflow = (total > capacity) | (need_delim & (total >= capacity))
+    buf = jnp.where(need_delim & (pos == total), jnp.uint8(delim), buf)
+    return buf, total, overflow
+
+
+def extract_carry_jnp(buf: jax.Array, total: jax.Array,
+                      last_record_end: jax.Array, flush: jax.Array,
+                      cfg) -> Tuple[jax.Array, jax.Array]:
+    """Cut the carried tail ``buf[last_record_end+1 : total]`` to the front
+    of a fresh fixed-capacity buffer.
+
+    ``last_record_end == -1`` (no complete record) carries the whole
+    payload; under ``flush`` the leftover is stale — either inert PADs or a
+    record the appended delimiter could not close (malformed input;
+    ``validation`` flags it) — and is dropped so the stream ends consumed.
+
+    Returns ``(new_carry_buf, new_carry_len)`` with everything beyond
+    ``new_carry_len`` PAD (the invariant ``prepend_carry`` relies on).
+    """
+    capacity = buf.shape[0]
+    pos = jnp.arange(capacity, dtype=jnp.int32)
+    cut = last_record_end + 1
+    new_len = jnp.maximum(total - cut, 0)
+    new_len = jnp.where(flush, 0, new_len)
+    new_buf = jnp.where(pos < new_len, jnp.roll(buf, -cut), jnp.uint8(PAD_BYTE))
+    return new_buf, new_len.astype(jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParseBackend:
     """Bundle of swappable stage implementations (see module docstring).
@@ -106,6 +182,15 @@ class ParseBackend:
     partition_impls: Tuple[str, ...]
     default_partition_impl: Callable  # (cfg) -> impl name ("auto" resolution)
     typeconv_path: Callable = lambda cfg: "reference"  # (cfg) -> path label
+    # §4.4 per-stream device-carry hooks (streaming engine); see module
+    # docstring.  Signatures:
+    #   prepend_carry(carry_buf (B,) u8, carry_len () i32, fresh (B,) u8,
+    #                 fresh_len () i32, flush () bool, cfg)
+    #       -> (buf (B,) u8, total () i32, overflow () bool)
+    #   extract_carry(buf (B,) u8, total () i32, last_record_end () i32,
+    #                 flush () bool, cfg) -> (carry_buf (B,) u8, carry_len () i32)
+    prepend_carry: Callable = prepend_carry_jnp
+    extract_carry: Callable = extract_carry_jnp
 
 
 BACKENDS: Dict[str, ParseBackend] = {}

@@ -75,7 +75,8 @@ def _device_prefix_offsets(rec: jax.Array, col_t: jax.Array, col_o: jax.Array, a
     return rec_prefix, t, o, n_total
 
 
-def _shard_parse(chunks: jax.Array, cfg: ParserConfig, axis: str) -> ShardedParse:
+def _shard_parse(chunks: jax.Array, cfg: ParserConfig,
+                 plan: stages_mod.ParsePlan, axis: str) -> ShardedParse:
     """Runs on every device under shard_map; ``chunks (C_local, K)``."""
     backend = backends_mod.get_backend(cfg.backend)
 
@@ -102,12 +103,13 @@ def _shard_parse(chunks: jax.Array, cfg: ParserConfig, axis: str) -> ShardedPars
 
     # ---- §3.3 locally: materialize (shared stage, index-only plan) -------
     # Record tags are shard-local (0-based) so the field index stays small;
-    # rec_base restores global ids.  ``convert=False``: shards export the
-    # CSS + field index and each host converts its own batch.
+    # rec_base restores global ids.  The plan was resolved once at driver
+    # construction with ``convert=False``: shards export the CSS + field
+    # index and each host converts its own batch.
     local_rec = ids.record_id - rec_base
-    plan = stages_mod.plan_materialize(cfg, backend, convert=False)
     cols, _ = stages_mod.materialize(
-        chunks, ctx.classes, local_rec, ids.column_id, plan, cfg, backend
+        chunks, ctx.classes, local_rec, ids.column_id, plan.materialize,
+        cfg, backend
     )
 
     return ShardedParse(
@@ -135,6 +137,11 @@ class DistributedParser:
         self.cfg = cfg
         self.mesh = mesh
         self.axis_names = tuple(axis_names)
+        #: Static ParsePlan (index-only: shards export unconverted) resolved
+        #: once — the same planning layer every driver adopts.
+        self.plan = stages_mod.plan_parse(
+            cfg, backends_mod.get_backend(cfg.backend), convert=False
+        )
         axis = self.axis_names
         spec_in = P(axis, None)
         out_specs = ShardedParse(
@@ -148,8 +155,10 @@ class DistributedParser:
             n_records=P(),
         )
 
+        plan = self.plan
+
         def wrapped(chunks):
-            return _shard_parse(chunks, cfg, axis)
+            return _shard_parse(chunks, cfg, plan, axis)
 
         self._fn = jax.jit(
             shard_map(

@@ -12,15 +12,19 @@ distributed and streaming drivers; ``ParserConfig.backend`` selects who runs
 the byte-level hot loops (``"reference"`` jnp vs ``"pallas"`` kernels, see
 ``core/backends.py``).
 
-Static configuration (DFA, schema, chunk size, capacities, backend) is baked
-into the jitted closure; the only traced input is the padded byte buffer, so
+The pipeline is plan + executor: construction resolves the config into a
+static :class:`stages.ParsePlan` once, and ``parse_chunks`` is a single
+``jax.jit`` of :func:`stages.execute_plan` over that plan.  Static
+configuration (DFA, schema, chunk size, capacities, backend) is baked into
+the jitted closure; the only traced input is the padded byte buffer, so
 repeated parses of same-shaped partitions reuse one executable — the
-property the streaming layer (core/streaming.py) relies on.
+property the streaming engine (core/streaming.py) builds its device-carry
+step on.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +33,6 @@ import numpy as np
 from repro.core import backends as backends_mod
 from repro.core import stages as stages_mod
 from repro.core import typeconv as typeconv_mod
-from repro.core import validation as validation_mod
 from repro.core.dfa import PAD_BYTE, Dfa
 
 
@@ -63,7 +66,7 @@ class ParserConfig:
     """Static parse-pipeline configuration, baked into the jitted closure.
 
     Every knob is hashable config resolved at construction time
-    (``__post_init__`` runs ``stages.plan_materialize`` so typos fail fast,
+    (``__post_init__`` runs ``stages.plan_parse`` so typos fail fast,
     before any tracing).  Knobs:
 
     ``dfa``
@@ -155,77 +158,33 @@ class ParserConfig:
 
     def __post_init__(self):
         # fail fast on typos: backend name + partition impl resolution +
-        # window-knob ranges
-        stages_mod.plan_materialize(self, backends_mod.get_backend(self.backend))
+        # window-knob ranges (plan_parse exercises the full planning layer)
+        stages_mod.plan_parse(self, backends_mod.get_backend(self.backend))
 
     @property
     def record_delim_byte(self) -> int:
         return self.dfa.group_bytes[0]
 
 
-class ParseResult(NamedTuple):
-    css: jax.Array                       # (N,) uint8 partitioned symbols
-    col_start: jax.Array                 # (n_cols+1,) int32
-    col_count: jax.Array                 # (n_cols+1,) int32
-    field_offset: jax.Array              # (n_cols, max_records) int32
-    field_length: jax.Array              # (n_cols, max_records) int32
-    values: Dict[str, typeconv_mod.Parsed]
-    validation: validation_mod.Validation
-    end_state: jax.Array                 # () int32 — carried into next partition
-    last_record_end: jax.Array           # () int32 — byte pos of last record
-                                         # delimiter (−1 if none); the
-                                         # streaming carry-over boundary
-
-
-def _parse_impl(raw_chunks: jax.Array, cfg: ParserConfig,
-                initial_state: jax.Array) -> ParseResult:
-    backend = backends_mod.get_backend(cfg.backend)
-    n_cols = cfg.schema.n_cols
-
-    # §3.1/§3.2 — parsing context + fused per-chunk offset summaries.
-    ctx = stages_mod.determine_contexts(
-        raw_chunks, cfg, backend, initial_state=initial_state
-    )
-    end_state = ctx.end_states[-1]
-
-    # §3.2 — record/column identification from the summaries.
-    ids = stages_mod.identify_symbols(ctx)
-
-    # §3.2/§3.3 — backend-owned materialization: tagging, stable partition,
-    # field index, type conversion (one shared stage, one static plan).
-    plan = stages_mod.plan_materialize(cfg, backend)
-    cols, values = stages_mod.materialize(
-        raw_chunks, ctx.classes, ids.record_id, ids.column_id, plan, cfg,
-        backend,
-    )
-
-    # §4.3 — validation.
-    flat_classes = ctx.classes.reshape(-1)
-    val = validation_mod.validate(
-        flat_classes, ids.record_id, end_state, ctx.saw_invalid, cfg.dfa,
-        cfg.max_records,
-        expected_columns=n_cols if cfg.validate_columns else None,
-    )
-
-    return ParseResult(
-        css=cols.css,
-        col_start=cols.col_start,
-        col_count=cols.col_count,
-        field_offset=cols.findex.offset,
-        field_length=cols.findex.length,
-        values=values,
-        validation=val,
-        end_state=end_state.astype(jnp.int32),
-        last_record_end=stages_mod.locate_carry(flat_classes),
-    )
+#: The per-partition parse output — defined next to the executor in
+#: ``core/stages.py``; re-exported here as the public name.
+ParseResult = stages_mod.ParseResult
 
 
 class Parser:
-    """User-facing parser: host-side input prep + one jitted device pipeline."""
+    """User-facing parser: host-side input prep + one jitted plan executor."""
 
     def __init__(self, cfg: ParserConfig):
         self.cfg = cfg
-        self._jit = jax.jit(lambda chunks, st: _parse_impl(chunks, cfg, st))
+        self.backend = backends_mod.get_backend(cfg.backend)
+        #: Static ParsePlan resolved once; `parse_chunks` and the streaming
+        #: engine's carry step both execute exactly this plan.
+        self.plan = stages_mod.plan_parse(cfg, self.backend)
+        self._jit = jax.jit(
+            lambda chunks, st: stages_mod.execute_plan(
+                chunks, self.plan, cfg, self.backend, initial_state=st
+            )
+        )
 
     # -- host-side -----------------------------------------------------------
     def prepare(self, data: bytes, pad_to: Optional[int] = None) -> np.ndarray:

@@ -2,8 +2,9 @@
 point every driver runs through.
 
 ``Parser`` (single device), ``DistributedParser`` (shard_map over a mesh)
-and ``StreamingParser`` (partition-pipelined, via ``Parser``) all compose
-exactly these functions; the byte-level hot loops inside them come from the
+and ``StreamSession``/``StreamingParser`` (partition-pipelined, device-
+resident carry) all compose exactly these functions; the byte-level hot
+loops inside them come from the
 :class:`repro.core.backends.ParseBackend` selected by
 ``ParserConfig.backend``:
 
@@ -20,6 +21,17 @@ exactly these functions; the byte-level hot loops inside them come from the
                           and conversion into kernels is a backend change,
                           never a driver change.
     locate_carry        — §4.4 carry-over boundary for streaming
+
+The whole per-partition pipeline is itself planned and executed the same
+way: :func:`plan_parse` resolves a config into a static :class:`ParsePlan`
+(the :class:`MaterializePlan` plus the §4.3 validation contract), and
+:func:`execute_plan` runs context-determination → symbol-ids → materialize
+→ validation → carry location as one traced function returning a
+:class:`ParseResult`.  ``Parser.parse_chunks`` is one ``jax.jit`` of
+``execute_plan``; the streaming engine (``core/streaming.py``) wraps the
+same executor in a donated carry-prepend/carry-extract step and ``vmap``s
+it over a stream axis — every driver executes the *same* plan, so a plan
+change (new stage, new fusion) propagates to all of them at once.
 
 Materialization is a backend responsibility, not driver glue: drivers pass
 the plan through and receive a :class:`ColumnBatch` plus converted values.
@@ -51,6 +63,7 @@ from repro.core import offsets as offsets_mod
 from repro.core import partition as partition_mod
 from repro.core import tagging as tagging_mod
 from repro.core import typeconv as typeconv_mod
+from repro.core import validation as validation_mod
 from repro.core.backends import ParseBackend
 from repro.core.dfa import RECORD_DELIM
 
@@ -146,6 +159,106 @@ def plan_materialize(cfg, backend: ParseBackend, *, convert: bool = True
         selected=selected,
         convert=conv,
         typeconv_path=backend.typeconv_path(cfg),
+    )
+
+
+class ParseResult(NamedTuple):
+    """Everything one parsed partition produces (all device arrays).
+
+    Returned by :func:`execute_plan`; re-exported as
+    ``repro.core.parser.ParseResult`` (the public name).
+    """
+
+    css: jax.Array                       # (N,) uint8 partitioned symbols
+    col_start: jax.Array                 # (n_cols+1,) int32
+    col_count: jax.Array                 # (n_cols+1,) int32
+    field_offset: jax.Array              # (n_cols, max_records) int32
+    field_length: jax.Array              # (n_cols, max_records) int32
+    values: Dict[str, typeconv_mod.Parsed]
+    validation: validation_mod.Validation
+    end_state: jax.Array                 # () int32 — carried into next partition
+    last_record_end: jax.Array           # () int32 — byte pos of last record
+                                         # delimiter (−1 if none); the
+                                         # streaming carry-over boundary
+
+
+class ParsePlan(NamedTuple):
+    """Static description of the WHOLE per-partition parse step.
+
+    ``plan_parse`` resolves a config once — the materialize sub-plan plus
+    the §4.3 validation contract — and ``execute_plan`` runs it.  Like
+    :class:`MaterializePlan`, everything here is hashable config baked into
+    the jitted closure; drivers build the plan at construction time so typos
+    fail fast and every partition of a stream reuses one executable.
+    """
+
+    materialize: MaterializePlan
+    expected_columns: Optional[int]   # None = skip the §4.3 column-count check
+
+
+def plan_parse(cfg, backend: ParseBackend, *, convert: bool = True) -> ParsePlan:
+    """Resolve ``cfg`` into the full per-partition :class:`ParsePlan`.
+
+    ``convert=False`` plans an index-only materialization (the distributed
+    driver's per-shard contract: shards export the CSS + field index and
+    each host converts its own batch).
+    """
+    return ParsePlan(
+        materialize=plan_materialize(cfg, backend, convert=convert),
+        expected_columns=cfg.schema.n_cols if cfg.validate_columns else None,
+    )
+
+
+def execute_plan(
+    raw_chunks: jax.Array,
+    plan: ParsePlan,
+    cfg,
+    backend: ParseBackend,
+    initial_state: Optional[jax.Array] = None,
+) -> ParseResult:
+    """Run one partition through the full §3.1→§4.4 pipeline per ``plan``.
+
+    The single traced composition point every driver executes:
+    ``Parser.parse_chunks`` jits exactly this; the streaming engine wraps it
+    in its donated carry step (prepend → ``execute_plan`` → extract) and
+    ``vmap``s that over a stream axis.  ``initial_state`` overrides the DFA
+    start state (the mid-record partition-boundary hook).
+    """
+    if initial_state is None:
+        initial_state = jnp.int32(cfg.dfa.start_state)
+
+    # §3.1/§3.2 — parsing context + fused per-chunk offset summaries.
+    ctx = determine_contexts(raw_chunks, cfg, backend, initial_state=initial_state)
+    end_state = ctx.end_states[-1]
+
+    # §3.2 — record/column identification from the summaries.
+    ids = identify_symbols(ctx)
+
+    # §3.2/§3.3 — backend-owned materialization: tagging, stable partition,
+    # field index, type conversion (one shared stage, one static plan).
+    cols, values = materialize(
+        raw_chunks, ctx.classes, ids.record_id, ids.column_id,
+        plan.materialize, cfg, backend,
+    )
+
+    # §4.3 — validation.
+    flat_classes = ctx.classes.reshape(-1)
+    val = validation_mod.validate(
+        flat_classes, ids.record_id, end_state, ctx.saw_invalid, cfg.dfa,
+        plan.materialize.max_records,
+        expected_columns=plan.expected_columns,
+    )
+
+    return ParseResult(
+        css=cols.css,
+        col_start=cols.col_start,
+        col_count=cols.col_count,
+        field_offset=cols.findex.offset,
+        field_length=cols.findex.length,
+        values=values,
+        validation=val,
+        end_state=end_state.astype(jnp.int32),
+        last_record_end=locate_carry(flat_classes),
     )
 
 

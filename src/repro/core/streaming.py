@@ -1,50 +1,355 @@
-"""End-to-end streaming parse (paper §4.4).
+"""End-to-end streaming parse engine (paper §4.4).
 
 The paper overlaps three pipeline stages per partition — transfer in, parse,
 return — on the PCIe bus's full-duplex channels with a device-side double
 buffer and a *carry-over*: the trailing incomplete record of partition *i*
 is prepended to partition *i+1*.
 
-JAX mapping (DESIGN.md §3): XLA's async dispatch is the stream engine.
-``device_put`` of partition *i+1* and the host-side read-back of partition
-*i−1*'s results both overlap the device parse of partition *i*; the only
-synchronisation is fetching the scalar ``last_record_end`` (the carry
-boundary), mirroring the carry-copy dependency edge in the paper's Fig. 7.
-Because every partition reuses one compiled executable (static capacity),
-there is no recompilation in the steady state.
+JAX mapping (DESIGN.md §3): XLA's async dispatch is the stream engine, and
+:class:`StreamSession` keeps the whole carry path on the device so nothing
+serialises it.  The per-partition step is ONE donated jitted function —
+``backend.prepend_carry`` (splice the device-resident carry in front of the
+fresh bytes) → ``stages.execute_plan`` (the same :class:`stages.ParsePlan`
+executor every driver runs) → ``backend.extract_carry`` (cut the new tail
+after ``last_record_end``) — whose carry outputs feed the next dispatch
+*directly*, as device arrays.  No ``int(result.last_record_end)``, no host
+``bytes`` slicing: the host thread only cuts source bytes into fixed-size
+takes and reads results **one partition behind** the dispatch (the paper's
+Fig. 7 timeline: transfer-in of partition *i+1* and the read-back of
+partition *i−1* both overlap the parse of partition *i*).  Because every
+partition reuses one compiled executable (static capacity), there is no
+recompilation in the steady state.
 
 The carry boundary comes from parse *metadata*, not from a host ``rfind``:
 a newline inside a quoted field must not be mistaken for a record boundary,
 which is exactly the context problem the paper solves.
 
-This driver composes :class:`Parser` partition-by-partition, so it inherits
-the backend-owned materialization path (``stages.materialize``) untouched:
-with ``backend="pallas"`` every partition runs the radix partition kernel
-and the fused gather+convert typeconv kernels with zero changes here.
+**Multi-stream batching**: ``StreamSession(n_streams=S)`` ``vmap``s the
+step over a leading stream axis — per-stream carry buffers, per-stream
+flush flags — so S independent sources (concurrent tenants) parse in one
+dispatch per round, bit-identical to S sequential single-stream sessions
+(pinned by ``tests/test_streaming.py``).
+
+:class:`StreamingParser` is the legacy iterator API, now a thin wrapper
+over a single-stream session (``engine="device"``); ``engine="host"``
+keeps the original host-carry loop — one blocking sync per partition —
+as the bit-identity oracle the device engine is tested against.
+
+Both engines compose :class:`Parser`'s plan, so they inherit the
+backend-owned materialization path untouched: with ``backend="pallas"``
+every partition runs the radix partition kernel and the fused
+gather+convert typeconv kernels with zero changes here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Iterator, Optional, Tuple
+from typing import Iterable, Iterator, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stages as stages_mod
 from repro.core.dfa import PAD_BYTE
 from repro.core.parser import ParseResult, Parser
+
+#: The engine's ONLY device→host read goes through this indirection — an
+#: *explicit* transfer, so a session keeps running under
+#: ``jax.transfer_guard_device_to_host("disallow")`` (which traps implicit
+#: ``int(...)``/``.item()``/``np.asarray`` syncs).  Tests monkeypatch it to
+#: count fetches and assert they trail dispatches by one partition.
+_device_get = jax.device_get
 
 
 @dataclasses.dataclass
 class StreamStats:
+    """Per-stream accounting.  Exact definitions:
+
+    ``partitions``
+        Parsed partitions yielded to the caller (suppressed no-op rounds of
+        a batched session are not counted).
+    ``bytes_in``
+        Raw *source* bytes consumed, each counted exactly once — the
+        denominator for honest end-to-end throughput.  Carry bytes that
+        re-enter the next partition are **not** re-counted here.
+    ``bytes_reparsed``
+        Carry-over bytes parsed a second (or third, …) time because their
+        record straddled a partition boundary.  Device work per stream is
+        proportional to ``bytes_in + bytes_reparsed``; a high ratio means
+        the partition size is too small for the record length.
+    ``records``
+        Complete records across all yielded partitions.
+    ``max_carry``
+        Largest carry that *survived* a partition (after the
+        final-partition stale-carry drop), i.e. the minimum
+        ``max_carry_bytes`` this stream would have needed.
+    """
+
     partitions: int = 0
     bytes_in: int = 0
+    bytes_reparsed: int = 0
     records: int = 0
     max_carry: int = 0
 
 
+class _StepAux(NamedTuple):
+    """Tiny per-partition scalars the host reads one round behind.
+
+    Deliberately does NOT alias the donated carry outputs: the next round's
+    dispatch donates ``(carry_buf, carry_len)``, which would invalidate any
+    aux leaf sharing their buffers before the one-behind fetch reads it
+    (``last_record_end`` lets the host re-derive the carry length from
+    values it already knows instead).
+    """
+
+    n_records: jax.Array        # () / (S,) int32 — complete records
+    last_record_end: jax.Array  # () / (S,) int32 — §4.4 carry boundary
+    overflow: jax.Array         # () / (S,) bool  — partition no longer fits
+
+
+class _Feed:
+    """Host-side cursor cutting one ``Iterable[bytes]`` into partition takes.
+
+    Every stream ends with exactly one ``flush=True`` take (possibly empty:
+    the source exhausted at a partition boundary); after that ``next_take``
+    returns ``None`` and the stream's lane goes inert.
+    """
+
+    def __init__(self, source: Iterable[bytes], partition_bytes: int):
+        self._it = iter(source)
+        self._buf = b""
+        self._pb = partition_bytes
+        self.exhausted = False
+        self.flushed = False
+
+    def next_take(self) -> Optional[Tuple[bytes, bool]]:
+        if self.flushed:
+            return None
+        while not self.exhausted and len(self._buf) < self._pb:
+            try:
+                self._buf += next(self._it)
+            except StopIteration:
+                self.exhausted = True
+        take, self._buf = self._buf[: self._pb], self._buf[self._pb:]
+        flush = self.exhausted and not self._buf
+        if flush:
+            self.flushed = True
+        return take, flush
+
+
+class StreamSession:
+    """Device-resident streaming engine with dispatch-ahead and multi-stream
+    batching (see module docstring).
+
+    Args:
+      parser: a configured :class:`Parser`; its ``max_records`` bounds
+        records *per partition per stream*, and its :class:`ParsePlan` is
+        the one the session step executes.
+      partition_bytes: raw bytes consumed from each source per partition.
+      max_carry_bytes: capacity reserved for the carry-over (longest record
+        any stream may contain — the paper's carry-over allocation).
+      n_streams: number of independent sources batched per dispatch
+        (leading ``vmap`` axis of the step; per-stream carry state).
+
+    ``stats`` is one :class:`StreamStats` per stream, accumulated across
+    ``parse_streams`` calls (carry state resets per call).
+    """
+
+    def __init__(self, parser: Parser, partition_bytes: int,
+                 max_carry_bytes: Optional[int] = None, n_streams: int = 1):
+        self.parser = parser
+        self.partition_bytes = int(partition_bytes)
+        self.max_carry_bytes = int(max_carry_bytes or partition_bytes)
+        k = parser.cfg.chunk_size
+        cap = self.partition_bytes + self.max_carry_bytes + 1
+        self.capacity = ((cap + k - 1) // k) * k
+        if self.partition_bytes < 1:
+            raise ValueError(
+                f"partition_bytes must be >= 1, got {partition_bytes}")
+        self.n_streams = int(n_streams)
+        if self.n_streams < 1:
+            raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+        # Double-buffered staging: round r+1 is assembled in one buffer
+        # while the other may still back round r's in-flight transfer.
+        # Stale bytes beyond a take need no re-padding — prepend_carry masks
+        # the fresh buffer at fresh_len, so only [0, len(take)) is ever read.
+        # Staging is PARTITION-sized, not capacity-sized: only fresh source
+        # bytes cross the bus each round; the jitted step zero-extends to
+        # capacity on-device (the carry tail never transfers).
+        S = self.n_streams
+        self._staging = [np.full((S, self.partition_bytes), PAD_BYTE, np.uint8)
+                         for _ in range(2)]
+        self._staging_idx = 0
+        self.stats: Tuple[StreamStats, ...] = tuple(StreamStats() for _ in range(S))
+        self._step = self._build_step()
+
+    # -- the donated per-partition device step -------------------------------
+    def _build_step(self):
+        parser = self.parser
+        cfg, backend, plan = parser.cfg, parser.backend, parser.plan
+        k = cfg.chunk_size
+
+        capacity = self.capacity
+
+        def step_one(carry_buf, carry_len, fresh, fresh_len, flush):
+            # The host transfers only the partition-sized fresh bytes;
+            # extend to the carry capacity on-device (PAD tail, fused into
+            # the splice by XLA — nothing extra crosses the bus).
+            pad = capacity - fresh.shape[-1]
+            if pad:
+                fresh = jnp.concatenate(
+                    [fresh, jnp.full((pad,), PAD_BYTE, jnp.uint8)])
+            buf, total, overflow = backend.prepend_carry(
+                carry_buf, carry_len, fresh, fresh_len, flush, cfg
+            )
+            result = stages_mod.execute_plan(buf.reshape(-1, k), plan, cfg, backend)
+            new_buf, new_len = backend.extract_carry(
+                buf, total, result.last_record_end, flush, cfg
+            )
+            aux = _StepAux(
+                n_records=result.validation.n_records.astype(jnp.int32),
+                last_record_end=result.last_record_end,
+                overflow=overflow,
+            )
+            return result, new_buf, new_len, aux
+
+        fn = step_one if self.n_streams == 1 else jax.vmap(step_one)
+        # Donate the carry buffers: partition i+1's step overwrites partition
+        # i's carry in place (no device-side copy growth).  CPU/interpret
+        # hosts can't alias donations — skip there to keep runs warning-free.
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        return jax.jit(fn, donate_argnums=donate)
+
+    def _init_carry(self):
+        S = self.n_streams
+        shape = (self.capacity,) if S == 1 else (S, self.capacity)
+        lshape = () if S == 1 else (S,)
+        return (jnp.full(shape, PAD_BYTE, jnp.uint8),
+                jnp.zeros(lshape, jnp.int32))
+
+    # -- host-side staging ---------------------------------------------------
+    def _stage_round(self, feeds: List[_Feed]):
+        """Assemble the next round's fresh buffers; ``None`` when every
+        stream has dispatched its flush partition."""
+        S = self.n_streams
+        staging = self._staging[self._staging_idx]
+        self._staging_idx ^= 1
+        fresh_len = np.zeros(S, np.int32)
+        flush = np.zeros(S, bool)
+        active = [False] * S
+        for s, feed in enumerate(feeds):
+            nt = feed.next_take()
+            if nt is None:
+                # Inert lane: empty take under flush keeps the (already
+                # empty) carry pinned at zero; drained rounds skip it.
+                flush[s] = True
+                continue
+            take, fl = nt
+            raw = np.frombuffer(take, np.uint8)
+            staging[s, : raw.size] = raw
+            fresh_len[s] = raw.size
+            flush[s] = fl
+            active[s] = True
+        if not any(active):
+            return None
+        fresh = jax.device_put(staging if S > 1 else staging[0])
+        return fresh, fresh_len, flush, active
+
+    # -- the dispatch-ahead loop ---------------------------------------------
+    def parse_streams(
+        self, sources: Sequence[Iterable[bytes]]
+    ) -> Iterator[Tuple[int, ParseResult, int]]:
+        """Drive ``n_streams`` sources to completion, one batched dispatch
+        per round, yielding ``(stream, result, n_complete)`` per partition
+        in round order.
+
+        Results are read one round behind the dispatch: round *r* is
+        yielded only after round *r+1* is in flight, and the only host
+        reads are one explicit ``jax.device_get`` of three scalars per
+        round (``_StepAux``) — the carry path itself never touches the
+        host.  Only records ``[0, n_complete)`` of each result are
+        complete; the trailing bytes re-appear in the stream's next
+        partition.
+        """
+        S = self.n_streams
+        sources = list(sources)
+        if len(sources) != S:
+            raise ValueError(f"expected {S} sources, got {len(sources)}")
+        feeds = [_Feed(src, self.partition_bytes) for src in sources]
+        carry_buf, carry_len = self._init_carry()
+        carry_known = [0] * S   # host mirror of carry_len, one round behind
+        pending = None
+        while True:
+            staged = self._stage_round(feeds)
+            if staged is None:
+                break
+            fresh, fresh_len, flush, active = staged
+            result, carry_buf, carry_len, aux = self._step(
+                carry_buf, carry_len, fresh,
+                jnp.asarray(fresh_len if S > 1 else fresh_len[0]),
+                jnp.asarray(flush if S > 1 else flush[0]),
+            )
+            if pending is not None:
+                yield from self._drain(pending, carry_known)
+            pending = (result, aux, fresh_len, flush, active)
+        if pending is not None:
+            yield from self._drain(pending, carry_known)
+
+    def _drain(self, pending, carry_known: List[int]):
+        """Fetch one round's scalars (the one-behind read) and yield its
+        per-stream results."""
+        result, aux, fresh_len, flush, active = pending
+        aux_np = _device_get(aux)
+        n_records = np.atleast_1d(aux_np.n_records)
+        last_end = np.atleast_1d(aux_np.last_record_end)
+        overflow = np.atleast_1d(aux_np.overflow)
+        for s in range(self.n_streams):
+            if not active[s]:
+                continue
+            take_len, carry_in = int(fresh_len[s]), carry_known[s]
+            if take_len == 0 and carry_in == 0:
+                # The optimistic end-of-stream flush round found nothing to
+                # parse (the source ended exactly at a partition boundary,
+                # or was empty): a no-op, not a partition.
+                carry_known[s] = 0
+                continue
+            if bool(overflow[s]):
+                n_bytes = carry_in + take_len + (1 if flush[s] else 0)
+                raise ValueError(
+                    f"record longer than capacity ({n_bytes} > "
+                    f"{self.capacity}); increase max_carry_bytes"
+                    + (f" [stream {s}]" if self.n_streams > 1 else "")
+                )
+            # Mirror of extract_carry: the carry length re-derived from
+            # host-known values + the fetched boundary (the donated device
+            # carry_len itself is never read back).
+            carry_out = 0 if flush[s] else max(
+                carry_in + take_len - (int(last_end[s]) + 1), 0)
+            st = self.stats[s]
+            st.partitions += 1
+            st.bytes_in += take_len
+            st.bytes_reparsed += carry_in
+            st.records += int(n_records[s])
+            st.max_carry = max(st.max_carry, carry_out)
+            carry_known[s] = carry_out
+            yield s, self._slice_result(result, s), int(n_records[s])
+
+    def _slice_result(self, result: ParseResult, s: int) -> ParseResult:
+        if self.n_streams == 1:
+            return result
+        return jax.tree_util.tree_map(lambda x: x[s], result)
+
+
 class StreamingParser:
-    """Partition-pipelined parser with carry-over record stitching.
+    """Partition-pipelined parser with carry-over record stitching — the
+    legacy single-stream iterator API.
+
+    ``engine="device"`` (default) wraps a single-stream
+    :class:`StreamSession`: device-resident carry, no per-partition host
+    sync, results one partition behind dispatch.  ``engine="host"`` keeps
+    the original host-carry loop — Python ``bytes`` stitching and one
+    blocking ``int(result.last_record_end)`` per partition — as the oracle
+    the device engine is pinned bit-identical to.
 
     Args:
       parser: a configured single-device :class:`Parser`; its
@@ -52,23 +357,59 @@ class StreamingParser:
       partition_bytes: raw bytes consumed from the source per partition.
       max_carry_bytes: capacity reserved for the carry-over (longest record
         the stream may contain, paper's carry-over allocation).
+      engine: ``device`` | ``host``.
     """
 
     def __init__(self, parser: Parser, partition_bytes: int,
-                 max_carry_bytes: Optional[int] = None):
+                 max_carry_bytes: Optional[int] = None, engine: str = "device"):
         self.parser = parser
         self.partition_bytes = int(partition_bytes)
         self.max_carry_bytes = int(max_carry_bytes or partition_bytes)
-        k = parser.cfg.chunk_size
-        cap = self.partition_bytes + self.max_carry_bytes + 1
-        self.capacity = ((cap + k - 1) // k) * k
-        self.stats = StreamStats()
+        if self.partition_bytes < 1:
+            raise ValueError(
+                f"partition_bytes must be >= 1, got {partition_bytes}")
+        if engine not in ("device", "host"):
+            raise ValueError(f"engine must be 'device' or 'host', got {engine!r}")
+        self.engine = engine
+        if engine == "device":
+            self._session = StreamSession(
+                parser, self.partition_bytes, max_carry_bytes=self.max_carry_bytes
+            )
+            self.capacity = self._session.capacity
+            self.stats = self._session.stats[0]
+        else:
+            k = parser.cfg.chunk_size
+            cap = self.partition_bytes + self.max_carry_bytes + 1
+            self.capacity = ((cap + k - 1) // k) * k
+            self.stats = StreamStats()
+            # One preallocated staging buffer reused across partitions (the
+            # host engine syncs per partition, so the device is done with it
+            # before the next rewrite); only the dirtied tail is re-padded.
+            self._staging = np.full(self.capacity, PAD_BYTE, np.uint8)
+            self._staged = 0
 
+    def parse_stream(
+        self, source: Iterable[bytes]
+    ) -> Iterator[Tuple[ParseResult, int]]:
+        """Yields ``(result, n_complete_records)`` per partition.
+
+        Only records ``[0, n_complete)`` of each result are complete; the
+        trailing bytes re-appear at the front of the next partition.
+        """
+        if self.engine == "device":
+            for _s, result, n in self._session.parse_streams([source]):
+                yield result, n
+        else:
+            yield from self._parse_stream_host(source)
+
+    # -- legacy host-carry engine (the bit-identity oracle) ------------------
     def _buf_to_chunks(self, buf: bytes, final: bool) -> np.ndarray:
         k = self.parser.cfg.chunk_size
         raw = np.frombuffer(buf, np.uint8)
-        out = np.full(self.capacity, PAD_BYTE, np.uint8)
+        out = self._staging
+        out[raw.size : max(self._staged, raw.size + 1)] = PAD_BYTE
         out[: raw.size] = raw
+        self._staged = raw.size
         if final:
             # Flush the unterminated tail record — but judge "unterminated"
             # on the last *payload* byte: a PAD-only tail (trailing 0x00
@@ -86,16 +427,10 @@ class StreamingParser:
                         f"{self.capacity}); increase max_carry_bytes"
                     )
                 out[raw.size] = self.parser.cfg.record_delim_byte
+                self._staged = raw.size + 1
         return out.reshape(-1, k)
 
-    def parse_stream(
-        self, source: Iterable[bytes]
-    ) -> Iterator[Tuple[ParseResult, int]]:
-        """Yields ``(result, n_complete_records)`` per partition.
-
-        Only records ``[0, n_complete)`` of each result are complete; the
-        trailing bytes re-appear at the front of the next partition.
-        """
+    def _parse_stream_host(self, source: Iterable[bytes]):
         carry = b""
         it = iter(source)
         buf = b""
@@ -119,8 +454,8 @@ class StreamingParser:
                     "increase max_carry_bytes"
                 )
             chunks = self._buf_to_chunks(full, final)
-            # async dispatch: the device parses while the host assembles the
-            # next partition; only the carry boundary scalar synchronises.
+            # The host-carry sync: fetching the carry boundary blocks on the
+            # partition's parse — the serialisation StreamSession removes.
             result = self.parser.parse_chunks(jnp.asarray(chunks))
             last = int(result.last_record_end)
             n_complete = int(result.validation.n_records)
@@ -139,6 +474,7 @@ class StreamingParser:
                 carry = b""
             self.stats.partitions += 1
             self.stats.bytes_in += len(take)
+            self.stats.bytes_reparsed += len(full) - len(take)
             self.stats.records += n_complete
             self.stats.max_carry = max(self.stats.max_carry, len(carry))
             yield result, n_complete

@@ -1,10 +1,18 @@
 """Streaming parser: partition boundaries inside quoted fields, carry-over
-stitching, and oracle equality for the full stream (paper §4.4)."""
+stitching, and oracle equality for the full stream (paper §4.4).
+
+Covers both engines of ``StreamingParser`` — ``device`` (the
+``StreamSession`` plan/executor step with on-device carry) and ``host``
+(the legacy host-carry loop, kept as the bit-identity oracle) — plus the
+multi-stream batched session and the no-per-partition-host-sync contract.
+"""
+import jax
 import numpy as np
 import pytest
 
 from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
-from repro.core.streaming import StreamingParser
+from repro.core import streaming as streaming_mod
+from repro.core.streaming import StreamSession, StreamingParser
 from tests.conftest import random_csv_table
 
 SCHEMA = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"), ("d", "date"))
@@ -148,3 +156,361 @@ def test_no_trailing_newline(rng):
     r = len(rows) - 1
     got = bytes(out["b"]["data"][out["b"]["offsets"][r]: out["b"]["offsets"][r + 1]])
     assert got.decode() == rows[r][1]
+
+# ---------------------------------------------------------------------------
+# StreamSession engine: device-resident carry, dispatch-ahead, multi-stream
+# ---------------------------------------------------------------------------
+
+def _backend_kw(backend):
+    # pin the radix partition *kernel* on the pallas side (under
+    # interpret=True "auto" would pick the jnp pass) so the streaming suite
+    # exercises the whole kernel path end to end
+    if backend == "pallas":
+        return dict(backend="pallas", partition_impl="kernel")
+    return dict(backend="reference")
+
+
+def _assert_results_equal(r, q, label=""):
+    for f in ("css", "col_start", "col_count", "field_offset", "field_length",
+              "end_state", "last_record_end"):
+        a, b = np.asarray(getattr(r, f)), np.asarray(getattr(q, f))
+        assert np.array_equal(a, b), f"{label}{f}: {a} != {b}"
+    assert r.values.keys() == q.values.keys()
+    for name in r.values:
+        for f in ("value", "valid", "empty"):
+            a = np.asarray(getattr(r.values[name], f))
+            b = np.asarray(getattr(q.values[name], f))
+            assert np.array_equal(a, b), f"{label}values[{name}].{f}: {a} != {b}"
+    for f in r.validation._fields:
+        a, b = np.asarray(getattr(r.validation, f)), np.asarray(getattr(q.validation, f))
+        assert np.array_equal(a, b), f"{label}validation.{f}: {a} != {b}"
+
+
+def _assert_stats_equal(a, b, label=""):
+    for f in ("partitions", "bytes_in", "bytes_reparsed", "records", "max_carry"):
+        assert getattr(a, f) == getattr(b, f), \
+            f"{label}stats.{f}: {getattr(a, f)} != {getattr(b, f)}"
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("tagging", ["tagged", "inline", "vector"])
+def test_device_engine_matches_host_and_oneshot(rng, backend, tagging):
+    """The acceptance bar: the device-carry engine is bit-identical to the
+    legacy host-carry iterator per partition, and its concatenated output
+    equals a one-shot ``Parser.parse_chunks`` of the whole input — across
+    all tagging modes and both backends."""
+    rows, data = random_csv_table(rng, 24, DTYPES, quote_prob=0.7, newline_prob=0.4)
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=40,
+                       chunk_size=32, tagging=tagging, **_backend_kw(backend))
+
+    sp_dev = StreamingParser(Parser(cfg), 160, max_carry_bytes=1024)
+    sp_host = StreamingParser(Parser(cfg), 160, max_carry_bytes=1024, engine="host")
+    dev = list(sp_dev.parse_stream(_source(data, 71)))
+    host = list(sp_host.parse_stream(_source(data, 71)))
+    assert len(dev) == len(host) and len(dev) > 1
+    for i, ((rd, nd), (rh, nh)) in enumerate(zip(dev, host)):
+        assert nd == nh
+        _assert_results_equal(rd, rh, label=f"{backend}/{tagging}/part{i}: ")
+    _assert_stats_equal(sp_dev.stats, sp_host.stats, label=f"{backend}/{tagging}: ")
+
+    # concatenated stream output == one-shot parse of the whole input
+    one_cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=40,
+                           chunk_size=32, tagging=tagging, **_backend_kw(backend))
+    one = Parser(one_cfg)
+    result = one.parse(data)
+    n = int(result.validation.n_records)
+    assert n == len(rows)
+    arrow = one.to_arrow(result)
+    streamed = StreamingParser(Parser(cfg), 160, max_carry_bytes=1024).parse_all(
+        _source(data, 71))
+    for c, col in enumerate(SCHEMA.columns):
+        got, want = streamed[col.name], arrow[col.name]
+        if "values" in got:
+            assert np.array_equal(got["values"], want["values"][:n]), col.name
+            want_validity = np.unpackbits(want["validity"], bitorder="little")[:n]
+            assert np.array_equal(got["validity"], want_validity.astype(bool)), col.name
+        else:
+            assert np.array_equal(np.asarray(got["offsets"], np.int64),
+                                  np.asarray(want["offsets"][: n + 1], np.int64)), col.name
+            assert np.array_equal(got["data"], want["data"][: want["offsets"][n]]), col.name
+
+
+@pytest.mark.parametrize("engine", ["device", "host"])
+def test_ragged_source_chunks(rng, engine):
+    """Sources that yield wildly uneven pieces (including empty ones) must
+    produce the same stream as any other chunking of the same bytes."""
+    rows, data = random_csv_table(rng, 50, DTYPES, quote_prob=0.6, newline_prob=0.3)
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=64, chunk_size=32)
+
+    def ragged():
+        sizes = rng.integers(0, 97, size=10_000)
+        i = 0
+        for sz in sizes:
+            if i >= len(data):
+                return
+            yield data[i : i + int(sz)]
+            i += int(sz)
+
+    sp = StreamingParser(Parser(cfg), 256, max_carry_bytes=2048, engine=engine)
+    out = sp.parse_all(ragged())
+    assert sp.stats.records == len(rows)
+    assert sp.stats.bytes_in == len(data)
+    ref = StreamingParser(Parser(cfg), 256, max_carry_bytes=2048, engine=engine)
+    out_ref = ref.parse_all(_source(data, 999))
+    for name in out:
+        for k in out[name]:
+            assert np.array_equal(out[name][k], out_ref[name][k]), (name, k)
+
+
+@pytest.mark.parametrize("engine", ["device", "host"])
+def test_carry_spans_multiple_partitions(engine):
+    """A quoted record much longer than a partition: its bytes are carried
+    (and re-parsed) across several partitions before completing."""
+    big = "B" * 300
+    data = f'1,"{big}",2.5\n2,tail,3.5\n'.encode()
+    cfg = ParserConfig(
+        dfa=make_csv_dfa(),
+        schema=Schema.of(("a", "int32"), ("b", "str"), ("c", "float32")),
+        max_records=8, chunk_size=32,
+    )
+    sp = StreamingParser(Parser(cfg), partition_bytes=64, max_carry_bytes=512,
+                         engine=engine)
+    out = sp.parse_all(_source(data, 37))
+    assert sp.stats.records == 2
+    got = bytes(out["b"]["data"][out["b"]["offsets"][0]: out["b"]["offsets"][1]])
+    assert got.decode() == big
+    # the carry grew past several partitions and its bytes were re-parsed
+    assert sp.stats.max_carry >= 2 * 64
+    assert sp.stats.bytes_reparsed > len(big)
+    assert sp.stats.bytes_in == len(data)
+
+
+@pytest.mark.parametrize("engine", ["device", "host"])
+def test_empty_source_stream(engine):
+    """An empty source (no bytes at all, or only empty yields) produces no
+    partitions, no records, and terminates."""
+    for source in ([], [b""], [b"", b""]):
+        sp = StreamingParser(_small_parser(), 32, max_carry_bytes=32, engine=engine)
+        assert list(sp.parse_stream(source)) == []
+        assert sp.stats.partitions == 0
+        assert sp.stats.records == 0
+        assert sp.stats.bytes_in == 0
+
+
+@pytest.mark.parametrize("engine", ["device", "host"])
+def test_single_giant_record_stream(engine):
+    """The whole stream is ONE unterminated record spanning many partitions;
+    the flush delimiter closes it at end-of-stream."""
+    big = "g" * 500
+    data = f'7,"{big}",1.25'.encode()  # no trailing newline
+    cfg = ParserConfig(
+        dfa=make_csv_dfa(),
+        schema=Schema.of(("a", "int32"), ("b", "str"), ("c", "float32")),
+        max_records=4, chunk_size=32,
+    )
+    sp = StreamingParser(Parser(cfg), partition_bytes=64, max_carry_bytes=1024,
+                         engine=engine)
+    out = sp.parse_all(_source(data, 50))
+    assert sp.stats.records == 1
+    got = bytes(out["b"]["data"][out["b"]["offsets"][0]: out["b"]["offsets"][1]])
+    assert got.decode() == big
+    np.testing.assert_allclose(out["c"]["values"], [1.25])
+    # every partition before the last carried everything it had seen
+    assert sp.stats.max_carry >= len(data) - 64
+
+
+def test_device_engine_capacity_overflow_raises():
+    sp = StreamingParser(_small_parser(), 32, max_carry_bytes=32)
+    data = b'1,"' + b"y" * 500 + b'"\n'
+    with pytest.raises(ValueError, match="record longer than capacity"):
+        list(sp.parse_stream(_source(data, 16)))
+
+
+def test_device_engine_exact_fill_flush_delimiter_raises():
+    sp = StreamingParser(_small_parser(), 32, max_carry_bytes=32)
+    data = b"y" * sp.capacity  # one delimiter-free record, exactly capacity
+    with pytest.raises(ValueError, match="record longer than capacity"):
+        list(sp.parse_stream(_source(data, 16)))
+
+
+def test_device_engine_exact_capacity_terminated_ok():
+    """A terminated record exactly filling the capacity is NOT an overflow
+    (no flush delimiter needed) — the case a host-side conservative
+    carry+take+1 check would false-positive on."""
+    sp = StreamingParser(_small_parser(), 32, max_carry_bytes=32)
+    payload = b"1," + b"a" * (sp.capacity - 3) + b"\n"
+    assert len(payload) == sp.capacity
+    parts = list(sp.parse_stream([payload]))
+    # the record straddles every partition, completing only in the last
+    assert [n for _, n in parts] == [0, 0, 1]
+    assert sp.stats.records == 1
+    host = StreamingParser(_small_parser(), 32, max_carry_bytes=32, engine="host")
+    assert [n for _, n in host.parse_stream([payload])] == [0, 0, 1]
+
+
+def test_invalid_partition_bytes_raises():
+    """partition_bytes < 1 must fail fast at construction (a zero-byte
+    partition would otherwise loop the device engine forever on empty
+    takes)."""
+    for bad in (0, -5):
+        with pytest.raises(ValueError, match="partition_bytes"):
+            StreamingParser(_small_parser(), bad)
+        with pytest.raises(ValueError, match="partition_bytes"):
+            StreamSession(_small_parser(), bad)
+
+
+def test_flush_with_trailing_pad_bytes_matches_host():
+    """An unterminated final record followed by source PAD bytes: the flush
+    delimiter is judged on the last payload byte but written after the PAD
+    tail (where the host oracle writes it) — the engines must stay
+    bit-identical, delimiter placement included."""
+    data = b"1,ab" + b"\x00" * 6
+    dev = StreamingParser(_small_parser(), 256, max_carry_bytes=64)
+    host = StreamingParser(_small_parser(), 256, max_carry_bytes=64, engine="host")
+    pd = list(dev.parse_stream([data]))
+    ph = list(host.parse_stream([data]))
+    assert len(pd) == len(ph) == 1
+    assert pd[0][1] == ph[0][1] == 1
+    _assert_results_equal(pd[0][0], ph[0][0], label="pad-tail-flush: ")
+    _assert_stats_equal(dev.stats, host.stats, label="pad-tail-flush: ")
+
+
+def test_flush_pad_tail_exact_fill_raises_both_engines():
+    """Payload + PAD tail exactly filling the capacity with the tail record
+    unterminated: the flush delimiter has no slot (it goes after the PAD
+    tail, like the host oracle's) — both engines must raise, not silently
+    diverge."""
+    for engine in ("device", "host"):
+        sp = StreamingParser(_small_parser(), 32, max_carry_bytes=32, engine=engine)
+        data = b"1," + b"a" * (sp.capacity - 4) + b"\x00\x00"
+        assert len(data) == sp.capacity
+        with pytest.raises(ValueError, match="record longer than capacity"):
+            list(sp.parse_stream([data]))
+
+
+def test_stream_stats_semantics(rng):
+    """bytes_in counts each source byte exactly once; bytes_reparsed counts
+    the carry re-parses; their sum is the device-side parse traffic."""
+    rows, data = random_csv_table(rng, 30, ("int32", "str"), quote_prob=0.5)
+    cfg = ParserConfig(dfa=make_csv_dfa(),
+                       schema=Schema.of(("a", "int32"), ("b", "str")),
+                       max_records=64, chunk_size=16)
+    for engine in ("device", "host"):
+        sp = StreamingParser(Parser(cfg), 64, max_carry_bytes=256, engine=engine)
+        list(sp.parse_stream(_source(data, 29)))
+        assert sp.stats.bytes_in == len(data), engine
+        assert sp.stats.records == len(rows), engine
+        # every partition except possibly the first re-parses the previous
+        # carry; with 64-byte partitions of multi-field rows there must be
+        # some straddling record
+        assert sp.stats.bytes_reparsed > 0, engine
+        assert sp.stats.bytes_reparsed <= sp.stats.partitions * sp.max_carry_bytes, engine
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_multistream_batched_vs_sequential(rng, backend):
+    """S concurrent streams in one batched session are bit-identical, per
+    stream per partition, to S sequential single-stream runs — including
+    ragged lengths (streams finish at different rounds) and an empty
+    stream in the batch."""
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=32,
+                       chunk_size=32, **_backend_kw(backend))
+    datas = []
+    for n_rows in (18, 7, 0):
+        if n_rows:
+            _, d = random_csv_table(rng, n_rows, DTYPES, quote_prob=0.6,
+                                    newline_prob=0.3)
+        else:
+            d = b""
+        datas.append(d)
+
+    sess = StreamSession(Parser(cfg), partition_bytes=96, max_carry_bytes=512,
+                         n_streams=len(datas))
+    batched = {s: [] for s in range(len(datas))}
+    for s, result, n in sess.parse_streams([[d] for d in datas]):
+        batched[s].append((result, n))
+
+    for s, d in enumerate(datas):
+        sp = StreamingParser(Parser(cfg), 96, max_carry_bytes=512)
+        seq = list(sp.parse_stream([d]))
+        assert len(seq) == len(batched[s]), (s, len(seq), len(batched[s]))
+        for i, ((rq, nq), (rb, nb)) in enumerate(zip(seq, batched[s])):
+            assert nq == nb, (s, i)
+            _assert_results_equal(rq, rb, label=f"{backend}/stream{s}/part{i}: ")
+        _assert_stats_equal(sp.stats, sess.stats[s], label=f"{backend}/stream{s}: ")
+
+
+def test_multistream_overflow_names_stream():
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=Schema.of(("a", "str"),),
+                       max_records=4, chunk_size=16)
+    sess = StreamSession(Parser(cfg), 32, max_carry_bytes=32, n_streams=2)
+    ok = b"1\n2\n"
+    bad = b'"' + b"y" * 500 + b'"\n'
+    with pytest.raises(ValueError, match=r"record longer than capacity.*stream 1"):
+        list(sess.parse_streams([[ok], [bad]]))
+
+
+def test_stream_session_no_per_partition_host_sync(monkeypatch):
+    """The acceptance contract for the carry path: between dispatches the
+    engine performs NO implicit device→host transfer (``int(...)`` /
+    ``.item()`` / ``np.asarray``) — enforced by jax's transfer guard — and
+    its one explicit per-round fetch trails the dispatch by one partition
+    (the Fig. 7 dispatch-ahead overlap)."""
+    cfg = ParserConfig(dfa=make_csv_dfa(),
+                       schema=Schema.of(("a", "int32"), ("b", "str")),
+                       max_records=32, chunk_size=16)
+    data = b"".join(b"%d,abcdefgh\n" % i for i in range(40))
+    sp = StreamingParser(Parser(cfg), 100, max_carry_bytes=128)
+    assert len(data) % sp.partition_bytes != 0  # no trailing empty-flush round
+
+    # warm-up outside the guard: compilation may legitimately inspect values
+    list(sp.parse_stream([data]))
+
+    session = sp._session
+    dispatches = []
+    real_step = session._step
+
+    def counting_step(*args):
+        dispatches.append(1)
+        return real_step(*args)
+
+    fetches = []  # dispatch count observed at each fetch
+    real_get = streaming_mod._device_get
+
+    def counting_get(x):
+        fetches.append(len(dispatches))
+        return real_get(x)
+
+    monkeypatch.setattr(session, "_step", counting_step)
+    monkeypatch.setattr(streaming_mod, "_device_get", counting_get)
+
+    with jax.transfer_guard_device_to_host("disallow"):
+        parts = [n for _result, n in sp.parse_stream([data])]
+
+    assert len(parts) > 3
+    assert sum(parts) == 40
+    assert len(dispatches) == len(parts)   # one dispatch per partition
+    assert len(fetches) == len(parts)      # one explicit scalar fetch per round
+    # dispatch-ahead: the fetch of round i happens only after round i+1 was
+    # dispatched (the last round has no successor)
+    for i, seen in enumerate(fetches[:-1]):
+        assert seen >= i + 2, f"fetch of round {i} ran before dispatch {i + 2}"
+
+
+def test_stream_session_reuse_and_jit_cache(rng):
+    """A session is reusable across parse_streams calls: carry state resets,
+    stats accumulate, and the compiled step is reused (no recompilation in
+    the steady state)."""
+    rows, data = random_csv_table(rng, 12, ("int32", "str"))
+    cfg = ParserConfig(dfa=make_csv_dfa(),
+                       schema=Schema.of(("a", "int32"), ("b", "str")),
+                       max_records=32, chunk_size=16)
+    sess = StreamSession(Parser(cfg), 64, max_carry_bytes=128)
+    first = [(np.asarray(r.css), n) for _s, r, n in sess.parse_streams([[data]])]
+    compiled_once = sess._step._cache_size()
+    second = [(np.asarray(r.css), n) for _s, r, n in sess.parse_streams([[data]])]
+    assert sess._step._cache_size() == compiled_once  # no recompilation
+    assert len(first) == len(second)
+    for (ca, na), (cb, nb) in zip(first, second):
+        assert na == nb and np.array_equal(ca, cb)
+    assert sess.stats[0].records == 2 * len(rows)
