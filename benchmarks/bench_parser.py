@@ -46,12 +46,17 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
             "<label>": {          # VARIANTS key, e.g. "pallas/fused"
               "us_per_call": float,       # best-of e2e parse wall clock
               "materialize_us": float,    # best-of materialize-stage-only
+                                          #   (absent for fused-pipeline:
+                                          #   the megakernel has no
+                                          #   separable materialize stage)
               "gbps": float,              # bytes / us_per_call
               "records": int,             # records the parse reported
               "partition_impl": str,      # resolved (never "auto")
               "fuse_typeconv": bool,
-              "typeconv_path": str        # reference | unfused |
-            }                             # fused-windowed | fused-wholecss
+              "typeconv_path": str,       # reference | unfused |
+                                          #   fused-windowed | fused-wholecss
+              "execute_path": str         # staged | fused — the resolved
+            }                             #   whole-pipeline tier
           },
           "fused_vs_unfused": {           # pallas/fused vs pallas/unfused,
             "speedup": float,             # materialize_us ratio (unfused/
@@ -60,7 +65,11 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
           "windowed_vs_wholecss": {       # pallas/fused vs pallas/
             "speedup": float,             # fused-wholecss, same ratio; the
             "no_slower": bool             # window-DMA accountability metric
-          }
+          },
+          "fused_vs_staged": {            # pallas/fused-pipeline vs pallas/
+            "speedup": float,             # fused, us_per_call ratio (staged/
+            "no_slower": bool             # fused); whole-pipeline-fusion
+          }                               # accountability metric
         },
         "stream": {                       # §4.4 streaming-engine workload
           "n_records_per_stream": int,    # CLI --records (reference streams;
@@ -85,11 +94,17 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
             }
           },
           "stream_batched_vs_sequential": {
-            "<backend>": {
+            "<backend>": {                # backend incl. "pallas-fused"
               "S<K>": {                   # batched K-stream session vs K
                 "speedup": float,         #   sequential single-stream runs
                 "outputs_match": bool     # per-partition bit-identity
               }
+            }
+          },
+          "fused_vs_staged": {            # pallas-fused vs pallas sessions
+            "S<K>": {
+              "speedup": float,           # staged s_total / fused s_total
+              "no_slower": bool
             }
           }
         }
@@ -122,27 +137,31 @@ N_YELP = 2000    # ~1.3 MB
 N_TAXI = 8000    # ~0.7 MB
 
 #: materialize_sweep variants: label → (backend, partition_impl,
-#: fuse_typeconv, window_rows).  ``pallas/fused`` is the backend-default
-#: fused materialization path (partition "auto" + *windowed* fused
-#: gather+convert kernels — what every driver runs);
-#: ``pallas/fused-wholecss`` pins the pre-window fused kernels (whole CSS
-#: in VMEM — the windowed path's baseline, and on real hardware the
-#: VMEM-capped variant); ``pallas/unfused`` is the pre-fusion pallas path
-#: (jnp scatter partition + XLA-gather typeconv) the fusion must not
-#: regress against; the rest sweep the partition impls, the radix *kernel*
-#: included (on this interpret-mode container the kernel is a correctness
-#: datapoint — "auto" resolves to it only on real hardware).
+#: fuse_typeconv, window_rows, fuse_pipeline).  ``pallas/fused`` is the
+#: backend-default staged materialization path (partition "auto" +
+#: *windowed* fused gather+convert kernels — what every driver runs);
+#: ``pallas/fused-pipeline`` is the whole-pipeline megakernel
+#: (``fuse_pipeline=True`` — one kernel per partition, no HBM round-trips
+#: between replay and typed columns); ``pallas/fused-wholecss`` pins the
+#: pre-window fused kernels (whole CSS in VMEM — the windowed path's
+#: baseline, and on real hardware the VMEM-capped variant);
+#: ``pallas/unfused`` is the pre-fusion pallas path (jnp scatter partition
+#: + XLA-gather typeconv) the fusion must not regress against; the rest
+#: sweep the partition impls, the radix *kernel* included (on this
+#: interpret-mode container the kernel is a correctness datapoint — "auto"
+#: resolves to it only on real hardware).
 VARIANTS = {
-    "reference/scatter": ("reference", "scatter", True, 0),
-    "reference/argsort": ("reference", "argsort", True, 0),
-    "reference/scatter2": ("reference", "scatter2", True, 0),
-    "pallas/fused": ("pallas", "auto", True, 0),
-    "pallas/fused-wholecss": ("pallas", "auto", True, -1),
-    "pallas/unfused": ("pallas", "scatter", False, 0),
-    "pallas/kernel+fused": ("pallas", "kernel", True, 0),
-    "pallas/scatter+fused": ("pallas", "scatter", True, 0),
-    "pallas/argsort+fused": ("pallas", "argsort", True, 0),
-    "pallas/scatter2+fused": ("pallas", "scatter2", True, 0),
+    "reference/scatter": ("reference", "scatter", True, 0, False),
+    "reference/argsort": ("reference", "argsort", True, 0, False),
+    "reference/scatter2": ("reference", "scatter2", True, 0, False),
+    "pallas/fused": ("pallas", "auto", True, 0, False),
+    "pallas/fused-pipeline": ("pallas", "auto", True, 0, True),
+    "pallas/fused-wholecss": ("pallas", "auto", True, -1, False),
+    "pallas/unfused": ("pallas", "scatter", False, 0, False),
+    "pallas/kernel+fused": ("pallas", "kernel", True, 0, False),
+    "pallas/scatter+fused": ("pallas", "scatter", True, 0, False),
+    "pallas/argsort+fused": ("pallas", "argsort", True, 0, False),
+    "pallas/scatter2+fused": ("pallas", "scatter2", True, 0, False),
 }
 
 
@@ -239,11 +258,12 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
         data = dataset(kind, n)
         entry = {"n_records": n, "bytes": len(data), "variants": {}}
         results, parsers, best = {}, {}, {}
-        for label, (backend, impl, fuse, window_rows) in VARIANTS.items():
+        for label, (backend, impl, fuse, window_rows, fuse_pipe) in VARIANTS.items():
             if backend not in backends:
                 continue
             p = mk(max_records=1 << 12, backend=backend, partition_impl=impl,
-                   fuse_typeconv=fuse, window_rows=window_rows)
+                   fuse_typeconv=fuse, window_rows=window_rows,
+                   fuse_pipeline=fuse_pipe)
             chunks = jnp.asarray(p.prepare(data))
             for _ in range(2):  # compile + warm
                 jax.block_until_ready(p.parse_chunks(chunks))
@@ -270,6 +290,11 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
                 "partition_impl": plan.partition_impl,
                 "fuse_typeconv": p.cfg.fuse_typeconv,
                 "typeconv_path": plan.typeconv_path,
+                # the resolved staged/fused tier for THIS input size (plan
+                # choice + the backend's static fused_max_bytes cap)
+                "execute_path": stages_mod.resolved_execute_path(
+                    p.plan, backends_mod.get_backend(p.cfg.backend),
+                    int(chunks.size)),
             }
             emit(f"materialize/{kind}/{label}", dt * 1e6,
                  f"{gbps(len(data), dt):.3f}GB/s;records={int(out.validation.n_records)}")
@@ -293,9 +318,13 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
         # typeconv, jitted in isolation): the §3.1/§3.2 DFA stage is
         # identical across variants and dominates the e2e numbers above, so
         # the fused-vs-unfused accountability metric is scoped to the stage
-        # this refactor actually owns.
-        if parsers:
-            mat_best = _materialize_only(parsers)
+        # this refactor actually owns.  The whole-pipeline megakernel has no
+        # standalone materialize stage (that is the point), so it is
+        # excluded here and compared end-to-end below instead.
+        staged_parsers = {l: pc for l, pc in parsers.items()
+                          if pc[0].plan.execute_path != "fused"}
+        if staged_parsers:
+            mat_best = _materialize_only(staged_parsers)
             for label, dt in mat_best.items():
                 entry["variants"][label]["materialize_us"] = dt * 1e6
                 emit(f"materialize_only/{kind}/{label}", dt * 1e6, "")
@@ -323,6 +352,20 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
                 "no_slower": bool(tf <= tw * 1.05),  # 5% timing-noise margin
             }
             emit(f"materialize/{kind}/windowed_vs_wholecss", 0.0, f"{tw / tf:.3f}x")
+        # The whole-pipeline-fusion accountability metric: the megakernel
+        # vs the staged backend default, end-to-end (the megakernel has no
+        # separable materialize stage).  On interpret-mode CPU this is a
+        # correctness-under-load datapoint — the HBM round-trips the fusion
+        # removes only cost on real hardware.
+        pipeline = "pallas/fused-pipeline"
+        if fused in entry["variants"] and pipeline in entry["variants"]:
+            tp = entry["variants"][pipeline]["us_per_call"]
+            ts = entry["variants"][fused]["us_per_call"]
+            entry["fused_vs_staged"] = {
+                "speedup": ts / tp,
+                "no_slower": bool(tp <= ts * 1.05),  # 5% timing-noise margin
+            }
+            emit(f"materialize/{kind}/fused_vs_staged", 0.0, f"{ts / tp:.3f}x")
         report["workloads"][kind] = entry
 
     if json_path:
@@ -364,7 +407,15 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
              "partition_bytes": partition_bytes,
              "max_carry_bytes": max_carry_bytes,
              "variants": {}, "stream_batched_vs_sequential": {}}
-    for backend in backends:
+    # "pallas-fused" = the pallas backend running the whole-pipeline
+    # megakernel per partition (fuse_pipeline=True), riding the same
+    # StreamSession carry hooks — the fused-streaming accountability row.
+    variants = list(backends)
+    if "pallas" in variants:
+        variants.append("pallas-fused")
+    for backend in variants:
+        be_kw = (dict(backend="pallas", fuse_pipeline=True)
+                 if backend == "pallas-fused" else dict(backend=backend))
         n_per_stream = n_records if backend == "reference" else max(n_records // 4, 16)
         datas = [dataset("yelp", n_per_stream, seed=s) for s in range(max(STREAM_S))]
         ratios = {}
@@ -374,7 +425,7 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
             # ONE session per shape, reused across warm-up and timed runs —
             # the steady-state contract (carry resets per call, the compiled
             # step is cached), so the timed pass holds zero compilation.
-            parser = yelp_parser(max_records=1 << 12, backend=backend)
+            parser = yelp_parser(max_records=1 << 12, **be_kw)
             sess_b = StreamSession(parser, partition_bytes,
                                    max_carry_bytes=max_carry_bytes, n_streams=S)
             sess_q = StreamSession(parser, partition_bytes,
@@ -441,6 +492,19 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
                  f"{gbps(total_bytes, dt_b):.3f}GB/s;batched_vs_seq="
                  f"{dt_q / dt_b:.2f}x;match={match}")
         entry["stream_batched_vs_sequential"][backend] = ratios
+    # megakernel-streaming accountability: fused vs staged pallas sessions,
+    # same stream counts (both run the same per-stream record budget).
+    fused_ratios = {}
+    for S in STREAM_S:
+        stg = entry["variants"].get(f"pallas/S{S}")
+        fus = entry["variants"].get(f"pallas-fused/S{S}")
+        if stg and fus:
+            fused_ratios[f"S{S}"] = {
+                "speedup": stg["s_total"] / fus["s_total"],
+                "no_slower": bool(fus["s_total"] <= stg["s_total"] * 1.05),
+            }
+    if fused_ratios:
+        entry["fused_vs_staged"] = fused_ratios
     return entry
 
 

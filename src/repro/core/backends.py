@@ -26,9 +26,20 @@ swappable stage implementations:
     the carried tail record in front of the fresh partition bytes, and cut
     the new tail after ``last_record_end``.  Both default to the shared jnp
     implementations below (pure ``where``/``roll`` masks — cheap next to
-    the parse); they are backend hooks so a future whole-pipeline-fusion
-    backend can fold the splice into its first kernel's DMA and the cut
-    into its last, without the engine changing.
+    the parse); they are backend hooks so a whole-pipeline-fusion backend
+    can fold the splice into its first kernel's DMA and the cut into its
+    last, without the engine changing.
+  * ``execute``            — OPTIONAL whole-pipeline override: run the
+    entire §3.1→§4.4 per-partition step (replay → tag → partition → field
+    index → convert → validation inputs) as the backend sees fit, bypassing
+    the staged composition in ``stages.execute_plan``.  Resolved into
+    ``ParsePlan.execute_path`` by ``stages.plan_parse`` when the config
+    asks for it (``ParserConfig.fuse_pipeline=True``) and gated at trace
+    time behind the static ``fused_max_bytes`` byte cap (the megakernel
+    holds the whole partition's working set in VMEM on real hardware);
+    above the cap ``execute_plan`` silently runs the staged tier — same
+    statically-bounded fallback design as the windowed numparse kernels.
+    Backends without a fused executor leave it ``None``.
 
 Backends:
 
@@ -66,7 +77,7 @@ up through ``ParserConfig.backend``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -191,6 +202,15 @@ class ParseBackend:
     #                 flush () bool, cfg) -> (carry_buf (B,) u8, carry_len () i32)
     prepend_carry: Callable = prepend_carry_jnp
     extract_carry: Callable = extract_carry_jnp
+    # Whole-pipeline fused executor (see module docstring).  Signature:
+    #   execute(raw_chunks (C,K) u8, plan: stages.ParsePlan, cfg,
+    #           initial_state () i32) -> stages.ParseResult
+    # None = backend has no fused path; plans resolve to "staged".
+    execute: Optional[Callable] = None
+    # Static byte cap for the fused path: partitions larger than this run
+    # the staged tier instead (checked at trace time in execute_plan — the
+    # megakernel's whole working set must fit VMEM on real hardware).
+    fused_max_bytes: int = 4 << 20
 
 
 BACKENDS: Dict[str, ParseBackend] = {}
@@ -379,6 +399,72 @@ def _pl_parse_date(css, offset, length, cfg) -> typeconv_mod.Parsed:
         css, offset, length, interpret=cfg.interpret, **_window_kw(cfg))
 
 
+def _pl_execute(raw_chunks, plan, cfg, initial_state):
+    """Whole-pipeline fused executor: §3.1 scan + ONE megakernel per
+    partition (``kernels/fused_pipeline``), then O(max_records)/scalar
+    assembly — no ``(N,)``/``(R,)`` intermediate ever leaves a kernel.
+
+    Bit-identical to the staged composition in ``stages.execute_plan`` by
+    construction: the megakernel replicates each staged stage op-for-op
+    (same replay select chains, same id scans, same scatter2 radix pass,
+    same segment reductions, same shared numparse cores) and this wrapper
+    replicates the §4.3 validation arithmetic on the kernel's
+    ``fields_per_rec``/scalar outputs exactly as ``validation.validate``
+    computes it from the flat class stream.
+    """
+    from repro.core import stages as stages_mod
+    from repro.core import validation as validation_mod
+    from repro.kernels.fused_pipeline import ops as fused_ops
+
+    mat = plan.materialize
+    # §3.1 upstream: chunk transition vectors (pallas kernel) + the O(C·S)
+    # composite scan — the only stages outside the megakernel.
+    vecs = _pl_chunk_vectors(raw_chunks, cfg)
+    scanned = tr.exclusive_scan_vectors(vecs, use_matmul=cfg.use_matmul_scan)
+    start = tr.start_states(scanned, cfg.dfa, initial_state=initial_state)
+
+    out = fused_ops.fused_parse(
+        raw_chunks, start, cfg.dfa,
+        tagging=mat.tagging, n_cols=mat.n_cols, max_records=mat.max_records,
+        selected=mat.selected, convert=mat.convert,
+        int_width=cfg.int_width, float_width=cfg.float_width,
+        interpret=cfg.interpret,
+    )
+
+    # §4.3 validation from the kernel's per-record field counts + scalars —
+    # the same arithmetic validation.validate runs on the flat class stream.
+    m = mat.max_records
+    accept = jnp.asarray(cfg.dfa.accept)
+    end_ok = accept[out.end_state.astype(jnp.int32)]
+    no_inv = ~out.saw_invalid
+    rec_live = jnp.arange(m) < out.n_records
+    big = jnp.int32(2**31 - 1)
+    minc = jnp.min(jnp.where(rec_live, out.fields_per_rec, big))
+    maxc = jnp.max(jnp.where(rec_live, out.fields_per_rec, 0))
+    if plan.expected_columns is None:
+        record_ok = rec_live
+    else:
+        record_ok = rec_live & (out.fields_per_rec == plan.expected_columns)
+    ok = end_ok & no_inv
+    if plan.expected_columns is not None:
+        ok &= jnp.all(record_ok | ~rec_live)
+    val = validation_mod.Validation(
+        ok, end_ok, no_inv, out.n_records, minc, maxc, record_ok
+    )
+
+    return stages_mod.ParseResult(
+        css=out.css,
+        col_start=out.col_start,
+        col_count=out.col_count,
+        field_offset=out.offset,
+        field_length=out.length,
+        values=out.values,
+        validation=val,
+        end_state=out.end_state.astype(jnp.int32),
+        last_record_end=out.last_record_end.astype(jnp.int32),
+    )
+
+
 def _pl_typeconv_path(cfg) -> str:
     if not _fuse(cfg):
         return "unfused"
@@ -408,4 +494,8 @@ PALLAS = register_backend(ParseBackend(
     # and is pinned bit-identical by the parity/fuzz/golden suites.
     default_partition_impl=lambda cfg: "scatter2" if cfg.interpret else "kernel",
     typeconv_path=_pl_typeconv_path,
+    # whole-pipeline fusion (ParserConfig.fuse_pipeline=True): one
+    # megakernel per partition, gated behind fused_max_bytes (the dataclass
+    # default) with the staged composition above as the fallback tier
+    execute=_pl_execute,
 ))

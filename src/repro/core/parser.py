@@ -133,6 +133,16 @@ class ParserConfig:
         whole-CSS fused kernel while the CSS is statically small, else to
         per-row windows — so the fallback never compiles an
         unbounded-VMEM kernel either.
+    ``fuse_pipeline``
+        pallas backend: run the whole replay→tag→partition→convert
+        composition as ONE megakernel per partition
+        (``kernels/fused_pipeline``) with no ``(R,)`` tag/offset arrays or
+        permutation round-trips through HBM.  Resolved softly at plan time
+        (``stages.plan_parse`` records the decision on
+        ``ParsePlan.execute_path``): backends without a fused executor and
+        index-only (``convert=False``) plans stay staged, and partitions
+        larger than the backend's static ``fused_max_bytes`` cap take the
+        staged tier at trace time.  Bit-identical to the staged path.
     """
 
     dfa: Dfa
@@ -155,6 +165,10 @@ class ParserConfig:
                                      # (0 = kernel default, -1 = whole CSS)
     max_window_bytes: int = 0        # pallas fused: static window tile bytes
                                      # (0 = auto-size from window_rows+width)
+    fuse_pipeline: bool = False      # pallas: whole-pipeline megakernel
+                                     # (replay→tag→partition→convert, one
+                                     # kernel per partition; soft-resolves
+                                     # to staged on unsupported plans)
 
     def __post_init__(self):
         # fail fast on typos: backend name + partition impl resolution +

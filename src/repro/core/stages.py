@@ -186,14 +186,24 @@ class ParsePlan(NamedTuple):
     """Static description of the WHOLE per-partition parse step.
 
     ``plan_parse`` resolves a config once — the materialize sub-plan plus
-    the §4.3 validation contract — and ``execute_plan`` runs it.  Like
-    :class:`MaterializePlan`, everything here is hashable config baked into
-    the jitted closure; drivers build the plan at construction time so typos
-    fail fast and every partition of a stream reuses one executable.
+    the §4.3 validation contract plus the staged-vs-fused execution choice —
+    and ``execute_plan`` runs it.  Like :class:`MaterializePlan`, everything
+    here is hashable config baked into the jitted closure; drivers build the
+    plan at construction time so typos fail fast and every partition of a
+    stream reuses one executable.
+
+    ``execute_path`` records the *resolved* execution tier (``"staged"`` =
+    the stage composition below; ``"fused"`` = the backend's whole-pipeline
+    ``execute`` override, still subject to the trace-time
+    ``backend.fused_max_bytes`` cap — :func:`resolved_execute_path` names
+    the tier a concrete input size actually takes) and ``path_reason`` says
+    why, replacing silent resolution with an inspectable decision.
     """
 
     materialize: MaterializePlan
     expected_columns: Optional[int]   # None = skip the §4.3 column-count check
+    execute_path: str = "staged"      # staged | fused
+    path_reason: str = "fuse_pipeline not requested"
 
 
 def plan_parse(cfg, backend: ParseBackend, *, convert: bool = True) -> ParsePlan:
@@ -202,11 +212,39 @@ def plan_parse(cfg, backend: ParseBackend, *, convert: bool = True) -> ParsePlan
     ``convert=False`` plans an index-only materialization (the distributed
     driver's per-shard contract: shards export the CSS + field index and
     each host converts its own batch).
+
+    ``cfg.fuse_pipeline=True`` requests the backend's whole-pipeline fused
+    executor (``backend.execute``); the request resolves here — softly, with
+    the decision and its reason recorded on the plan — because the fallback
+    tiers are part of the design (mirroring the windowed numparse kernels):
+    backends without a fused executor, and index-only plans (the megakernel
+    produces typed columns, which ``convert=False`` drivers must not pay
+    for), stay staged.
     """
+    path, reason = "staged", "fuse_pipeline not requested"
+    if getattr(cfg, "fuse_pipeline", False):
+        if backend.execute is None:
+            reason = f"backend {backend.name!r} has no fused executor"
+        elif not convert:
+            reason = "index-only plan (convert=False) stays staged"
+        else:
+            path, reason = "fused", "fuse_pipeline=True"
     return ParsePlan(
         materialize=plan_materialize(cfg, backend, convert=convert),
         expected_columns=cfg.schema.n_cols if cfg.validate_columns else None,
+        execute_path=path,
+        path_reason=reason,
     )
+
+
+def resolved_execute_path(plan: ParsePlan, backend: ParseBackend,
+                          n_bytes: int) -> str:
+    """The execution tier ``execute_plan`` actually takes for an input of
+    ``n_bytes`` — the plan's choice plus the static byte cap (benchmarks
+    and debug output report this instead of guessing)."""
+    if plan.execute_path != "fused":
+        return "staged"
+    return "fused" if n_bytes <= backend.fused_max_bytes else "staged"
 
 
 def execute_plan(
@@ -226,6 +264,15 @@ def execute_plan(
     """
     if initial_state is None:
         initial_state = jnp.int32(cfg.dfa.start_state)
+
+    # Whole-pipeline fusion: when the plan resolved to the backend's fused
+    # executor AND the partition fits the backend's static VMEM byte cap,
+    # hand the entire replay→tag→partition→convert composition to the
+    # megakernel.  Both conditions are trace-time Python (shape + plan), so
+    # the staged composition below is the statically bounded fallback tier
+    # — same design as the windowed numparse cap, one level up.
+    if plan.execute_path == "fused" and raw_chunks.size <= backend.fused_max_bytes:
+        return backend.execute(raw_chunks, plan, cfg, initial_state)
 
     # §3.1/§3.2 — parsing context + fused per-chunk offset summaries.
     ctx = determine_contexts(raw_chunks, cfg, backend, initial_state=initial_state)

@@ -202,6 +202,9 @@ class StreamSession:
             buf, total, overflow = backend.prepend_carry(
                 carry_buf, carry_len, fresh, fresh_len, flush, cfg
             )
+            # execute_plan dispatches staged vs fused (the whole-pipeline
+            # megakernel) per the resolved plan — the carry hooks above/
+            # below are path-agnostic, so fuse_pipeline streams for free.
             result = stages_mod.execute_plan(buf.reshape(-1, k), plan, cfg, backend)
             new_buf, new_len = backend.extract_carry(
                 buf, total, result.last_record_end, flush, cfg

@@ -38,7 +38,12 @@ DEFAULT_BLOCK_CHUNKS = 256
 
 
 def _group_select(bytes_i32, group_bytes, n_groups):
-    """Branchless group id for a vector of bytes (SWAR analogue)."""
+    """Branchless group id for a vector of bytes (SWAR analogue).
+
+    Shared with the whole-pipeline megakernel
+    (``kernels/fused_pipeline``), whose in-kernel replay must classify
+    bytes exactly like the staged replay kernels here.
+    """
     g = jnp.full(bytes_i32.shape, n_groups - 1, jnp.int32)  # catch-all
     for gi, b in enumerate(group_bytes):
         g = jnp.where(bytes_i32 == b, gi, g)

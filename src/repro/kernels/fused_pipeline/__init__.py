@@ -1,0 +1,11 @@
+"""Whole-pipeline fusion: one Pallas megakernel per partition (replay →
+tag → partition → convert) with no HBM round-trips between stages.
+
+Wired into the ``pallas`` backend as its ``ParseBackend.execute`` override
+(``core/backends.py``); selected by ``ParserConfig.fuse_pipeline=True`` and
+gated behind the backend's static ``fused_max_bytes`` cap — above the cap
+``stages.execute_plan`` falls back to the staged kernel composition.
+"""
+from repro.kernels.fused_pipeline.ops import FusedParse, fused_parse
+
+__all__ = ["FusedParse", "fused_parse"]

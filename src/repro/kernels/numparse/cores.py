@@ -1,0 +1,166 @@
+"""Shared per-dtype arithmetic cores for every typed-conversion kernel.
+
+One definition of the §3.3 field arithmetic — int (branchless Horner with
+pre-step overflow detection), float (sign/mantissa/dot/exponent sections,
+statically unrolled masked Horner), date (digit/separator/civil-calendar
+validation + Hinnant days-from-civil) — imported by all four conversion
+paths:
+
+  * the unfused rowwise kernels (``numparse.parse_*_fields``),
+  * the whole-CSS fused gather+convert kernels (``parse_*_fields_fused``),
+  * the windowed-DMA kernels (``parse_*_fields_windowed``),
+  * the whole-pipeline megakernel (``kernels/fused_pipeline``).
+
+All run on the VPU with the width axis statically unrolled (W ≤ ~24) and
+only read lanes ``< length`` (or mask them), so every consumer is
+bit-identical to the jnp reference (``typeconv.parse_int`` /
+``parse_float`` / ``parse_date``) by construction — a single core means
+no copy-paste drift between the staged and fused pipelines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import typeconv as typeconv_mod
+
+DEFAULT_BLOCK_ROWS = 512
+#: Gather width for date fields — ``YYYY-MM-DD HH:MM:SS`` is exactly 19 bytes.
+DATE_WIDTH = 19
+#: CSS window starts are aligned down to this many bytes (the TPU lane
+#: count) so the windowed BlockSpec DMA is lane-aligned on real hardware;
+#: window tiles are sized in multiples of it.
+WINDOW_ALIGN = 128
+_ZERO = ord("0")
+# Plain Python int: pallas kernels may not capture traced module constants.
+_I32_MAX = typeconv_mod.INT32_MAX
+
+
+def _int_arith(b, ln, block_rows: int, width: int):
+    """``(BR, W) int32`` field bytes + ``(BR,) int32`` lengths →
+    ``(value (BR,) int32, ok (BR,) bool)``.  Only lanes ``< ln`` are read."""
+    first = b[:, 0]
+    neg = first == ord("-")
+    has_sign = neg | (first == ord("+"))
+    sign = jnp.where(neg, -1, 1)
+
+    acc = jnp.zeros((block_rows,), jnp.int32)
+    bad = jnp.zeros((block_rows,), jnp.bool_)
+    ndig = jnp.zeros((block_rows,), jnp.int32)
+    for w in range(width):
+        d = b[:, w] - _ZERO
+        # lane w is a live digit if it is inside the field and not the sign
+        live = (w < ln) & ~(has_sign & (w == 0))
+        is_digit = (d >= 0) & (d <= 9)
+        bad |= live & ~is_digit
+        use = live & is_digit
+        # magnitude overflow: acc*10+d would exceed INT32_MAX
+        bad |= use & (acc > (_I32_MAX - d) // 10)
+        acc = jnp.where(use, acc * 10 + d, acc)
+        ndig += use.astype(jnp.int32)
+
+    ok = ~bad & (ndig > 0) & (ln <= width)
+    return sign * acc, ok
+
+
+def _float_arith(raw, ln, block_rows: int, width: int):
+    """Masked float32 parse over ``(BR, W) int32`` bytes — mirrors
+    ``typeconv.parse_float`` operation-for-operation."""
+    br, w = block_rows, width
+    lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
+    m = lane < ln[:, None]
+    raw = jnp.where(m, raw, 0)
+
+    # Optional leading sign: shift the lane window left by one where
+    # present (same trick as typeconv._sign_and_digits).
+    first = raw[:, 0]
+    has_sign = (first == ord("-")) | (first == ord("+"))
+    sign = jnp.where(first == ord("-"), -1, 1).astype(jnp.int32)
+    shifted = jnp.concatenate(
+        [raw[:, 1:], jnp.zeros((br, 1), jnp.int32)], axis=1)
+    shifted_m = jnp.concatenate(
+        [m[:, 1:], jnp.zeros((br, 1), jnp.bool_)], axis=1)
+    b = jnp.where(has_sign[:, None], shifted, raw)
+    bm = jnp.where(has_sign[:, None], shifted_m, m)
+
+    is_dot = (b == ord(".")) & bm
+    is_e = ((b == ord("e")) | (b == ord("E"))) & bm
+    dot_pos = jnp.min(jnp.where(is_dot, lane, w), axis=1)   # (BR,)
+    e_pos = jnp.min(jnp.where(is_e, lane, w), axis=1)
+
+    d = b - _ZERO
+    is_digit = (d >= 0) & (d <= 9)
+
+    in_mant = bm & (lane < e_pos[:, None])
+    mant_digit = in_mant & ~is_dot
+    ok = (jnp.sum(is_dot, axis=1) <= 1) & ((dot_pos <= e_pos) | (dot_pos >= w))
+    ok &= jnp.all(is_digit | ~mant_digit, axis=1)
+    ok &= jnp.any(mant_digit & is_digit, axis=1)
+
+    # Mantissa Horner, statically unrolled over the width.
+    active = mant_digit & is_digit
+    dm = jnp.where(active, d, 0).astype(jnp.float32)
+    macc = jnp.zeros((br,), jnp.float32)
+    for k in range(w):
+        macc = jnp.where(active[:, k], macc * 10.0 + dm[:, k], macc)
+    frac_digits = jnp.sum(active & (lane > dot_pos[:, None]), axis=1)
+
+    # Exponent section.
+    after_e = bm & (lane > e_pos[:, None])
+    e_sign_lane = jnp.clip(e_pos + 1, 0, w - 1)
+    e_first = jnp.sum(jnp.where(lane == e_sign_lane[:, None], b, 0), axis=1)
+    has_e = e_pos < w
+    e_neg = has_e & (e_first == ord("-"))
+    e_signed = has_e & ((e_first == ord("-")) | (e_first == ord("+")))
+    exp_digit = after_e & (lane > (e_pos + jnp.where(e_signed, 1, 0))[:, None])
+    ok &= jnp.all(is_digit | ~exp_digit, axis=1)
+    ok &= ~has_e | jnp.any(exp_digit, axis=1)
+    de = jnp.where(exp_digit & is_digit, d, 0)
+    eacc = jnp.zeros((br,), jnp.int32)
+    for k in range(w):
+        eacc = jnp.where(exp_digit[:, k], eacc * 10 + de[:, k], eacc)
+
+    exp = jnp.where(e_neg, -eacc, eacc) - frac_digits
+    value = (sign.astype(jnp.float32) * macc *
+             jnp.power(jnp.float32(10.0), exp.astype(jnp.float32)))
+    ok &= ln <= w
+    return value, ok
+
+
+def _date_arith(raw, ln, block_rows: int):
+    """``YYYY-MM-DD[ HH:MM:SS]`` over ``(BR, 19) int32`` bytes — mirrors
+    ``typeconv.parse_date`` (civil-calendar + time-range validation)."""
+    br, w = block_rows, DATE_WIDTH
+    lane = jax.lax.broadcasted_iota(jnp.int32, (br, w), 1)
+    raw = jnp.where(lane < ln[:, None], raw, 0)
+    d = raw - _ZERO
+
+    def num(*lanes):
+        acc = jnp.zeros((br,), jnp.int32)
+        for k in lanes:
+            acc = acc * 10 + d[:, k]
+        return acc
+
+    year, mon, day = num(0, 1, 2, 3), num(5, 6), num(8, 9)
+    has_time = ln >= 19
+    hh = jnp.where(has_time, num(11, 12), 0)
+    mm = jnp.where(has_time, num(14, 15), 0)
+    ss = jnp.where(has_time, num(17, 18), 0)
+
+    dd = (d >= 0) & (d <= 9)
+    ok = (dd[:, 0] & dd[:, 1] & dd[:, 2] & dd[:, 3] &
+          dd[:, 5] & dd[:, 6] & dd[:, 8] & dd[:, 9])
+    ok &= (raw[:, 4] == ord("-")) & (raw[:, 7] == ord("-"))
+    ok &= (ln == 10) | (ln == 19)
+    time_ok = (dd[:, 11] & dd[:, 12] & dd[:, 14] & dd[:, 15] &
+               dd[:, 17] & dd[:, 18] &
+               (raw[:, 13] == ord(":")) & (raw[:, 16] == ord(":")) &
+               ((raw[:, 10] == ord(" ")) | (raw[:, 10] == ord("T"))))
+    ok &= jnp.where(has_time, time_ok, True)
+    ok &= ((mon >= 1) & (mon <= 12) & (day >= 1) &
+           (day <= typeconv_mod._days_in_month(year, mon)))
+    ok &= jnp.where(has_time, (hh <= 23) & (mm <= 59) & (ss <= 59), True)
+
+    secs = (typeconv_mod._days_from_civil(year, mon, day) * 86400 +
+            hh * 3600 + mm * 60 + ss)
+    return secs, ok

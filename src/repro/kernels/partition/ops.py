@@ -61,5 +61,10 @@ def partition_tags(
 
     # The radix pass's scatter: invert dest into gather form (XLA owns the
     # irregular write — see kernels/partition/partition.py docstring).
+    # This is the staged path's one remaining HBM round-trip; the fused
+    # whole-pipeline megakernel (kernels/fused_pipeline/) never builds the
+    # permutation at all — it consumes dest directly in apply form
+    # (css[dest[i]] = sym[i]), which is equivalent because dest is the
+    # inverse of perm by construction.
     perm = jnp.zeros((n,), jnp.int32).at[dest].set(jnp.arange(n, dtype=jnp.int32))
     return Partitioned(perm, start.astype(jnp.int32), count.astype(jnp.int32))

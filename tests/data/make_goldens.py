@@ -30,12 +30,16 @@ GOLDEN_SCHEMAS = {
 
 
 def build_parser(name: str, backend: str = "reference") -> Parser:
+    # "pallas-fused" is a pseudo-backend for the golden sweep: the pallas
+    # backend with the whole-pipeline megakernel (fuse_pipeline=True).
+    fused = backend == "pallas-fused"
+    be = "pallas" if fused else backend
     return Parser(ParserConfig(
         dfa=make_csv_dfa(), schema=GOLDEN_SCHEMAS[name],
-        max_records=32, chunk_size=64, backend=backend,
+        max_records=32, chunk_size=64, backend=be, fuse_pipeline=fused,
         # pin the radix partition kernel on pallas so golden regressions
         # cover the kernel path (interpret-mode "auto" picks the jnp pass)
-        partition_impl="kernel" if backend == "pallas" else "auto",
+        partition_impl="kernel" if be == "pallas" else "auto",
     ))
 
 

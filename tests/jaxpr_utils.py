@@ -1,4 +1,22 @@
-"""Shared jaxpr inspection helpers for the no-XLA-gather acceptance tests."""
+"""Shared jaxpr inspection helpers for the no-XLA-gather and
+no-HBM-round-trip acceptance tests."""
+
+# Data-movement primitives that stand for an HBM round-trip when they appear
+# *between* pallas kernels at the XLA level: gathers/scatters materialise a
+# reordered copy of their operand in HBM.  (Scatter covers every .at[] mode —
+# set/add/min/max lower to scatter variants.)
+_ROUNDTRIP_PRIMS = (
+    "gather",
+    "scatter",
+    "scatter-add",
+    "scatter_add",
+    "scatter-min",
+    "scatter_min",
+    "scatter-max",
+    "scatter_max",
+    "scatter-mul",
+    "scatter_mul",
+)
 
 
 def gathers_outside_pallas(jaxpr, acc=None):
@@ -14,4 +32,46 @@ def gathers_outside_pallas(jaxpr, acc=None):
                 inner = getattr(sub, "jaxpr", sub)
                 if hasattr(inner, "eqns"):
                     gathers_outside_pallas(inner, acc)
+    return acc
+
+
+def _max_elems(eqn):
+    """Largest operand/output element count of ``eqn`` (0 if shapeless)."""
+    best = 0
+    for v in list(eqn.invars) + list(eqn.outvars):
+        aval = getattr(v, "aval", None)
+        shape = getattr(aval, "shape", None)
+        if shape is None:
+            continue
+        n = 1
+        for d in shape:
+            n *= int(d)
+        best = max(best, n)
+    return best
+
+
+def hbm_roundtrips_outside_pallas(jaxpr, min_elems, acc=None):
+    """Collect gather/scatter-family eqns outside every pallas_call whose
+    largest operand or output holds ``>= min_elems`` elements.
+
+    This is the whole-pipeline-fusion acceptance detector: the fused path
+    may keep tiny bookkeeping gathers at the XLA level (the O(C·S) §3.1
+    scan composition, the O(S) accept-mask lookup), but any input-sized
+    permutation — the staged path's tag arrays, partition scatter, or
+    perm-inversion scatter — shows up here as a large gather/scatter and
+    fails the pin.  ``min_elems`` is sized by the caller relative to the
+    partition (e.g. ``N // 2``) so the detector is robust to small
+    bookkeeping while still catching any (N,)- or (R,)-sized round-trip.
+    """
+    acc = [] if acc is None else acc
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        if eqn.primitive.name in _ROUNDTRIP_PRIMS and _max_elems(eqn) >= min_elems:
+            acc.append(eqn)
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (tuple, list)) else (v,)):
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    hbm_roundtrips_outside_pallas(inner, min_elems, acc)
     return acc

@@ -86,6 +86,23 @@ def test_parser_parity(dfa_name, tagging):
                           label=f"{dfa_name}/{tagging}: ")
 
 
+@pytest.mark.parametrize("dfa_name", sorted(DFAS))
+def test_parser_parity_fused(dfa_name):
+    """Third backend axis: the whole-pipeline megakernel
+    (``fuse_pipeline=True``) must match reference bit-for-bit too.  (The
+    per-tagging-mode sweep + streaming/carry variants live in
+    test_fused_pipeline.py.)"""
+    ref, _ = _pair(dfa_name)
+    fus = Parser(ParserConfig(dfa=DFAS[dfa_name](), schema=SCHEMAS[dfa_name],
+                              backend="pallas", partition_impl="kernel",
+                              fuse_pipeline=True, max_records=16,
+                              chunk_size=16))
+    assert fus.plan.execute_path == "fused"
+    data = INPUTS[dfa_name]
+    _assert_results_equal(ref.parse(data), fus.parse(data),
+                          label=f"{dfa_name} fused: ")
+
+
 def test_parser_parity_nondefault_block_chunks():
     """Chunk counts that do not divide block_chunks exercise the pallas
     backend's pad-to-block path."""

@@ -1,0 +1,193 @@
+"""Whole-pipeline fusion acceptance: the megakernel path
+(``fuse_pipeline=True`` on the pallas backend) must be bit-identical to the
+staged composition AND emit no input-sized HBM round-trips between the DFA
+replay and the typed-column output.
+
+Three layers of pins:
+
+* **parity** — fused vs reference across every DFA × tagging mode, the
+  streaming carry hook, and multi-partition streams (all exact,
+  ``np.array_equal``; same bar as test_backend_parity).
+* **plan metadata** — ``plan_parse`` records the resolved tier + reason on
+  ``ParsePlan`` so drivers/benchmarks can report what actually ran; the
+  fallback tiers (no fused executor, index-only plan, byte cap) each have
+  an explicit pin.
+* **jaxpr** — the fused trace contains no gather/scatter-family eqn outside
+  a pallas_call touching ≥ N/2 elements (N = partition bytes).  The staged
+  path's perm-inversion scatter (kernels/partition/ops.py) is the positive
+  control proving the detector sees the round-trip it is supposed to kill.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jaxpr_utils import hbm_roundtrips_outside_pallas
+from test_backend_parity import DFAS, INPUTS, SCHEMAS, _assert_results_equal
+
+from repro.core import Parser, ParserConfig
+from repro.core import backends as backends_mod
+from repro.core import stages as stages_mod
+from repro.core.streaming import StreamingParser
+
+
+def _cfg(dfa_name, *, backend="pallas", fuse_pipeline=True, **kw):
+    kw.setdefault("max_records", 16)
+    kw.setdefault("chunk_size", 16)
+    if backend == "pallas":
+        kw.setdefault("partition_impl", "kernel")
+    return ParserConfig(dfa=DFAS[dfa_name](), schema=SCHEMAS[dfa_name],
+                        backend=backend, fuse_pipeline=fuse_pipeline, **kw)
+
+
+def _pair(dfa_name, **kw):
+    """(reference parser, fused pallas parser) for one grammar."""
+    ref = Parser(_cfg(dfa_name, backend="reference", fuse_pipeline=False,
+                      partition_impl="auto", **kw))
+    fus = Parser(_cfg(dfa_name, **kw))
+    assert fus.plan.execute_path == "fused", fus.plan.path_reason
+    return ref, fus
+
+
+# ---------------------------------------------------------------------------
+# parity
+
+
+@pytest.mark.parametrize("dfa_name", sorted(DFAS))
+@pytest.mark.parametrize("tagging", ("tagged", "inline", "vector"))
+def test_fused_parity(dfa_name, tagging):
+    ref, fus = _pair(dfa_name, tagging=tagging)
+    data = INPUTS[dfa_name]
+    _assert_results_equal(ref.parse(data), fus.parse(data),
+                          label=f"{dfa_name}/{tagging} fused: ")
+
+
+def test_fused_parity_carry_initial_state():
+    """The §4.4 streaming hook: a mid-quote initial state must flow through
+    the megakernel's replay exactly like the staged scan."""
+    ref, fus = _pair("csv")
+    chunks = jnp.asarray(ref.prepare(b'b",2,3\n4,"x",5\n'))
+    enc = ref.cfg.dfa.state_names.index("ENC")
+    r = ref.parse_chunks(chunks, initial_state=jnp.int32(enc))
+    q = fus.parse_chunks(chunks, initial_state=jnp.int32(enc))
+    _assert_results_equal(r, q, label="fused/ENC: ")
+
+
+def test_fused_streaming_bit_identity():
+    """Multi-partition stream through StreamingParser: the fused path rides
+    the same prepend/extract carry hooks, so every partition must match."""
+    ref, fus = _pair("csv", max_records=32)
+    data = INPUTS["csv"] * 6
+    outs = []
+    for p in (ref, fus):
+        sp = StreamingParser(p, partition_bytes=64, max_carry_bytes=64)
+        parts = [(r, n) for r, n in sp.parse_stream([data])]
+        assert sp.stats.partitions > 1
+        outs.append(parts)
+    assert len(outs[0]) == len(outs[1])
+    for (r, n_r), (q, n_q) in zip(*outs):
+        assert n_r == n_q
+        _assert_results_equal(r, q, label="fused stream: ")
+
+
+# ---------------------------------------------------------------------------
+# plan metadata + fallback tiers
+
+
+def test_plan_records_fused_path():
+    cfg = _cfg("csv")
+    plan = Parser(cfg).plan
+    assert plan.execute_path == "fused"
+    assert plan.path_reason == "fuse_pipeline=True"
+
+
+def test_plan_default_is_staged():
+    cfg = _cfg("csv", fuse_pipeline=False)
+    plan = Parser(cfg).plan
+    assert plan.execute_path == "staged"
+    assert "not requested" in plan.path_reason
+
+
+def test_plan_backend_without_executor_stays_staged():
+    """The reference backend has no fused executor: the knob soft-resolves
+    to staged with the reason recorded (no error — same tier design as the
+    windowed numparse fallbacks)."""
+    cfg = _cfg("csv", backend="reference", fuse_pipeline=True,
+               partition_impl="auto")
+    plan = Parser(cfg).plan
+    assert plan.execute_path == "staged"
+    assert "no fused executor" in plan.path_reason
+
+
+def test_plan_index_only_stays_staged():
+    """convert=False (the distributed per-shard contract) must not pay for
+    in-kernel typed columns it would throw away."""
+    cfg = _cfg("csv")
+    be = backends_mod.get_backend("pallas")
+    plan = stages_mod.plan_parse(cfg, be, convert=False)
+    assert plan.execute_path == "staged"
+    assert "convert=False" in plan.path_reason
+
+
+def test_byte_cap_falls_back_to_staged():
+    """Partitions above ``fused_max_bytes`` take the staged tier at trace
+    time — and still produce identical results."""
+    tiny = dataclasses.replace(backends_mod.get_backend("pallas"),
+                               name="pallas-tinyfuse", fused_max_bytes=8)
+    backends_mod.register_backend(tiny)
+    try:
+        ref, fus = _pair("csv")
+        cfg = dataclasses.replace(fus.cfg, backend="pallas-tinyfuse")
+        p = Parser(cfg)
+        assert p.plan.execute_path == "fused"  # plan still requests fusion
+        chunks = p.prepare(INPUTS["csv"])
+        # ... but any realistic partition exceeds the 8-byte cap:
+        assert stages_mod.resolved_execute_path(p.plan, tiny, chunks.size) \
+            == "staged"
+        _assert_results_equal(ref.parse(INPUTS["csv"]), p.parse(INPUTS["csv"]),
+                              label="byte-cap: ")
+    finally:
+        backends_mod.BACKENDS.pop("pallas-tinyfuse", None)
+
+
+def test_resolved_execute_path_under_cap():
+    p = Parser(_cfg("csv"))
+    be = backends_mod.get_backend("pallas")
+    chunks = p.prepare(INPUTS["csv"])
+    assert stages_mod.resolved_execute_path(p.plan, be, chunks.size) == "fused"
+
+
+# ---------------------------------------------------------------------------
+# jaxpr: no HBM round-trips between replay and typed columns
+
+
+def _trace(parser, chunks):
+    be = backends_mod.get_backend(parser.cfg.backend)
+    return jax.make_jaxpr(
+        lambda c: stages_mod.execute_plan(c, parser.plan, parser.cfg, be)
+    )(chunks)
+
+
+def test_fused_no_hbm_roundtrips():
+    """The megakernel path may keep tiny bookkeeping gathers at the XLA
+    level (the O(C·S) scan composition, the O(S) accept lookup) but nothing
+    input-sized: no tag arrays, no partition scatter, no perm inversion."""
+    # small max_records so (R,) arrays sit well under the N/2 threshold too
+    fus = Parser(_cfg("csv", max_records=16))
+    chunks = jnp.asarray(fus.prepare(INPUTS["csv"]))
+    n = int(chunks.size)
+    jx = _trace(fus, chunks)
+    offenders = hbm_roundtrips_outside_pallas(jx.jaxpr, n // 2)
+    assert not offenders, [str(e.primitive) for e in offenders]
+
+
+def test_staged_positive_control():
+    """Detector sanity: the staged pallas path's perm-inversion scatter
+    (kernels/partition/ops.py) IS an input-sized HBM round-trip."""
+    stg = Parser(_cfg("csv", fuse_pipeline=False, max_records=16))
+    chunks = jnp.asarray(stg.prepare(INPUTS["csv"]))
+    n = int(chunks.size)
+    jx = _trace(stg, chunks)
+    assert hbm_roundtrips_outside_pallas(jx.jaxpr, n // 2)

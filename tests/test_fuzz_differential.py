@@ -4,9 +4,10 @@ oracle (the harness §3.3's kernel completion is hardened by).
 Random CSV tables — quoted fields, escaped quotes, embedded newlines, empty
 and missing fields, signed/overflowing ints, exponent floats, valid and
 invalid datetimes, unterminated tails — are parsed end-to-end on
-``backend="reference"`` and ``backend="pallas"`` and cross-checked
+``backend="reference"``, ``backend="pallas"``, and the pallas
+whole-pipeline megakernel (``fuse_pipeline=True``), and cross-checked
 field-by-field against Python's ``csv`` module + ``int()`` / ``float()`` /
-``datetime`` oracles.  The two backends must agree *bit-for-bit* (values,
+``datetime`` oracles.  All backends must agree *bit-for-bit* (values,
 ``valid``, ``empty``, CSS, field index); the reference backend must agree
 with the oracle up to documented semantics:
 
@@ -174,7 +175,7 @@ def make_table(seed, n_rows):
 
 @pytest.fixture(scope="module")
 def parsers():
-    return {
+    parsers = {
         be: Parser(ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA,
                                 max_records=MAX_RECORDS, chunk_size=64,
                                 backend=be,
@@ -184,6 +185,14 @@ def parsers():
                                 partition_impl="kernel" if be == "pallas" else "auto"))
         for be in ("reference", "pallas")
     }
+    # third axis: the whole-pipeline megakernel (fuse_pipeline=True) joins
+    # every bit-for-bit comparison
+    parsers["pallas-fused"] = Parser(ParserConfig(
+        dfa=make_csv_dfa(), schema=SCHEMA, max_records=MAX_RECORDS,
+        chunk_size=64, backend="pallas", partition_impl="kernel",
+        fuse_pipeline=True))
+    assert parsers["pallas-fused"].plan.execute_path == "fused"
+    return parsers
 
 
 def _check_against_oracle(rows, res, parser):
@@ -225,7 +234,9 @@ def _run_differential(parsers, seed, n_rows):
     chunks = jnp.asarray(parsers["reference"].prepare(data, pad_to=PAD_BYTES))
     ref = parsers["reference"].parse_chunks(chunks)
     pal = parsers["pallas"].parse_chunks(chunks)
+    fus = parsers["pallas-fused"].parse_chunks(chunks)
     _assert_results_equal(ref, pal, label=f"seed={seed}: ")  # bit-for-bit
+    _assert_results_equal(ref, fus, label=f"seed={seed} fused: ")
     _check_against_oracle(rows, ref, parsers["reference"])
 
 

@@ -164,9 +164,13 @@ def test_no_trailing_newline(rng):
 def _backend_kw(backend):
     # pin the radix partition *kernel* on the pallas side (under
     # interpret=True "auto" would pick the jnp pass) so the streaming suite
-    # exercises the whole kernel path end to end
+    # exercises the whole kernel path end to end; "pallas-fused" is the
+    # whole-pipeline megakernel riding the same carry hooks
     if backend == "pallas":
         return dict(backend="pallas", partition_impl="kernel")
+    if backend == "pallas-fused":
+        return dict(backend="pallas", partition_impl="kernel",
+                    fuse_pipeline=True)
     return dict(backend="reference")
 
 
@@ -192,7 +196,7 @@ def _assert_stats_equal(a, b, label=""):
             f"{label}stats.{f}: {getattr(a, f)} != {getattr(b, f)}"
 
 
-@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("backend", ["reference", "pallas", "pallas-fused"])
 @pytest.mark.parametrize("tagging", ["tagged", "inline", "vector"])
 def test_device_engine_matches_host_and_oneshot(rng, backend, tagging):
     """The acceptance bar: the device-carry engine is bit-identical to the
@@ -407,7 +411,7 @@ def test_stream_stats_semantics(rng):
         assert sp.stats.bytes_reparsed <= sp.stats.partitions * sp.max_carry_bytes, engine
 
 
-@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("backend", ["reference", "pallas", "pallas-fused"])
 def test_multistream_batched_vs_sequential(rng, backend):
     """S concurrent streams in one batched session are bit-identical, per
     stream per partition, to S sequential single-stream runs — including
