@@ -107,6 +107,29 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
               "no_slower": bool
             }
           }
+        },
+        "serve": {                        # multi-tenant ParseService workload
+          "n_records_per_tenant": int,    # CLI --records (pallas tenants run
+                                          #   smaller — per-variant field)
+          "partition_bytes": int,
+          "max_carry_bytes": int,
+          "variants": {
+            "<backend>/S<K>": {           # K tenants, one batched session
+              "s_total": float,           # batch wall clock (post warm-up
+                                          #   wave on the same service — the
+                                          #   timed wave holds zero compiles)
+              "gbps": float,              # AGGREGATE: sum of per-tenant
+                                          #   bytes_in / s_total
+              "fairness": float,          # min/max per-tenant throughput
+                                          #   over the same wall clock
+                                          #   (equal sources -> 1.0 = fair)
+              "records": int,
+              "bytes": int,
+              "bytes_reparsed": int,
+              "n_records_per_tenant": int,
+              "session_builds": int       # total sessions compiled — pins
+            }                             #   warm-wave reuse (tier caching)
+          }
         }
       }
     }
@@ -508,6 +531,77 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
     return entry
 
 
+#: Serve-workload tenant counts (concurrent tenants per service batch).
+SERVE_S = (4,)
+
+
+def serve_sweep(n_records=250, backends=("reference", "pallas"),
+                partition_bytes=1 << 14, max_carry_bytes=1 << 13):
+    """Multi-tenant serving workload: S tenants with one shared plan key
+    through ``ParseService`` in synchronous mode — one admission decision,
+    one tier-S batched session.  A warm-up wave on the same service
+    compiles the session step, so the timed wave holds zero compilation
+    (the steady-state serving contract; pinned by ``session_builds``).
+
+    ``gbps`` is aggregate: the sum of per-tenant ``bytes_in`` over the
+    batch wall clock.  ``fairness`` is min/max of per-tenant throughput
+    over that same wall clock — the tenants submit equal-record sources,
+    so 1.0 means the vmapped lanes served every tenant the same number of
+    bytes per second and any spread is source-size variance plus ragged
+    lane lifetimes, not scheduler bias.  As in the stream workload, carry
+    re-parses are excluded from the numerator.
+    """
+    from repro.core import ParserConfig, Schema, make_csv_dfa
+    from repro.data import synth as synth_mod
+    from repro.serve import ParseService
+
+    entry = {"n_records_per_tenant": n_records,
+             "partition_bytes": partition_bytes,
+             "max_carry_bytes": max_carry_bytes,
+             "variants": {}}
+    for backend in backends:
+        n_per = n_records if backend == "reference" else max(n_records // 4, 16)
+        cfg = ParserConfig(
+            dfa=make_csv_dfa(), schema=Schema.of(*synth_mod.YELP_SCHEMA),
+            max_records=1 << 12, chunk_size=64, backend=backend)
+        for S in SERVE_S:
+            datas = [dataset("yelp", n_per, seed=s) for s in range(S)]
+            svc = ParseService(tiers=(S,), start=False)
+
+            def wave():
+                ts = [svc.submit(cfg, [d], partition_bytes=partition_bytes,
+                                 max_carry_bytes=max_carry_bytes)
+                      for d in datas]
+                t0 = time.perf_counter()
+                svc.step()
+                dt = time.perf_counter() - t0
+                for t in ts:          # channels were filled during step()
+                    for _ in t.results():
+                        pass
+                return ts, dt
+
+            wave()                    # warm-up: compiles the tier-S step
+            ts, dt = wave()
+            builds = svc.registry.session_builds
+            svc.close()
+            per = [t.stats.bytes_in / dt for t in ts]
+            total_bytes = sum(t.stats.bytes_in for t in ts)
+            entry["variants"][f"{backend}/S{S}"] = {
+                "s_total": dt,
+                "gbps": gbps(total_bytes, dt),
+                "records": sum(t.stats.records for t in ts),
+                "bytes": total_bytes,
+                "bytes_reparsed": sum(t.stats.bytes_reparsed for t in ts),
+                "n_records_per_tenant": n_per,
+                "fairness": min(per) / max(per),
+                "session_builds": builds,
+            }
+            emit(f"serve/{backend}/S{S}", dt * 1e6,
+                 f"{gbps(total_bytes, dt):.3f}GB/s;fairness="
+                 f"{min(per) / max(per):.3f};session_builds={builds}")
+    return entry
+
+
 def fig12_partition_size():
     data = dataset("yelp", N_YELP * 2)
     for part_kib in (64, 256, 1024):
@@ -609,7 +703,7 @@ def main(argv=None):
     ap.add_argument("--backend", default="all",
                     choices=["all", "reference", "pallas"])
     ap.add_argument("--workload", default="all",
-                    choices=["all", "yelp", "taxi", "stream"])
+                    choices=["all", "yelp", "taxi", "stream", "serve"])
     ap.add_argument("--json", default="BENCH_parser.json", metavar="PATH",
                     help="machine-readable sweep output ('' to skip)")
     ap.add_argument("--records", type=int, default=250,
@@ -620,7 +714,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     backends = ("reference", "pallas") if args.backend == "all" else (args.backend,)
-    workloads = (("yelp", "taxi", "stream") if args.workload == "all"
+    workloads = (("yelp", "taxi", "stream", "serve") if args.workload == "all"
                  else (args.workload,))
     print("name,us_per_call,derived")
     mat = tuple(w for w in workloads if w in ("yelp", "taxi"))
@@ -631,6 +725,9 @@ def main(argv=None):
         report = _base_report(args.records)
     if "stream" in workloads:
         report["workloads"]["stream"] = stream_sweep(
+            n_records=args.records, backends=backends)
+    if "serve" in workloads:
+        report["workloads"]["serve"] = serve_sweep(
             n_records=args.records, backends=backends)
     if args.json:
         with open(args.json, "w") as f:

@@ -211,6 +211,12 @@ class ParseBackend:
     # the staged tier instead (checked at trace time in execute_plan — the
     # megakernel's whole working set must fit VMEM on real hardware).
     fused_max_bytes: int = 4 << 20
+    # Backend-specific contribution to ``stages.plan_key`` (the serving
+    # registry's executable fingerprint): a hashable tuple of every config
+    # knob this backend's traced code *reads* beyond what the ParsePlan
+    # already captures.  Two configs whose plan keys are equal must trace
+    # to bit-identical executables — list knobs conservatively.
+    config_key: Callable = lambda cfg: ()
 
 
 BACKENDS: Dict[str, ParseBackend] = {}
@@ -465,6 +471,18 @@ def _pl_execute(raw_chunks, plan, cfg, initial_state):
     )
 
 
+def _pl_config_key(cfg) -> Tuple:
+    """Pallas kernel knobs that shape traced code beyond the ParsePlan."""
+    return (
+        "interpret", bool(cfg.interpret),
+        "block_chunks", getattr(cfg, "block_chunks", None),
+        "fuse_typeconv", _fuse(cfg),
+        "window_rows", getattr(cfg, "window_rows", 0),
+        "max_window_bytes", getattr(cfg, "max_window_bytes", 0),
+        "fuse_pipeline", getattr(cfg, "fuse_pipeline", False),
+    )
+
+
 def _pl_typeconv_path(cfg) -> str:
     if not _fuse(cfg):
         return "unfused"
@@ -494,6 +512,7 @@ PALLAS = register_backend(ParseBackend(
     # and is pinned bit-identical by the parity/fuzz/golden suites.
     default_partition_impl=lambda cfg: "scatter2" if cfg.interpret else "kernel",
     typeconv_path=_pl_typeconv_path,
+    config_key=_pl_config_key,
     # whole-pipeline fusion (ParserConfig.fuse_pipeline=True): one
     # megakernel per partition, gated behind fused_max_bytes (the dataclass
     # default) with the staged composition above as the fallback tier

@@ -247,6 +247,50 @@ def resolved_execute_path(plan: ParsePlan, backend: ParseBackend,
     return "fused" if n_bytes <= backend.fused_max_bytes else "staged"
 
 
+def dfa_key(dfa) -> Tuple:
+    """Content fingerprint of a :class:`~repro.core.dfa.Dfa`.
+
+    ``Dfa`` hashes by identity (its tables are numpy arrays), which is right
+    for jit caching within a process but wrong for a serving registry: two
+    tenants constructing ``make_csv_dfa()`` independently get *equal* DFAs
+    in different objects.  This keys on the table bytes instead.
+    """
+    return (
+        dfa.transition.tobytes(), dfa.emission.tobytes(),
+        dfa.group_of.tobytes(), tuple(dfa.group_bytes),
+        int(dfa.start_state), dfa.accept.tobytes(), dfa.invalid_state,
+    )
+
+
+def plan_key(cfg, backend: Optional[ParseBackend] = None, *,
+             convert: bool = True) -> Tuple:
+    """Stable, hashable fingerprint of the executable ``cfg`` compiles to.
+
+    Two configs with equal plan keys trace to bit-identical jitted parse
+    steps — same DFA *content* (not object identity), same schema, same
+    static capacities, same resolved :class:`ParsePlan`, same backend knobs
+    (``backend.config_key``) — so a serving registry can share ONE compiled
+    ``Parser``/``StreamSession`` among the tenants that produce them.
+    Unequal keys may still compile identically (the key is conservative);
+    that only costs a duplicate executable, never a wrong share.
+    """
+    if backend is None:
+        from repro.core import backends as backends_mod
+        backend = backends_mod.get_backend(cfg.backend)
+    plan = plan_parse(cfg, backend, convert=convert)
+    return (
+        backend.name,
+        backend.config_key(cfg),
+        dfa_key(cfg.dfa),
+        tuple((c.name, c.dtype, bool(c.selected)) for c in cfg.schema.columns),
+        cfg.chunk_size,
+        cfg.use_matmul_scan,
+        cfg.int_width,
+        cfg.float_width,
+        plan,
+    )
+
+
 def execute_plan(
     raw_chunks: jax.Array,
     plan: ParsePlan,

@@ -61,6 +61,31 @@ from repro.core.parser import ParseResult, Parser
 _device_get = jax.device_get
 
 
+class StreamOverflow(ValueError):
+    """Typed per-stream overflow record.
+
+    A record longer than the session capacity cannot be parsed: the carry
+    splice wraps and the lane's buffer contents are garbage.  In a batched
+    session this is a *per-lane* fault, not a session fault —
+    :meth:`StreamSession.parse_streams` yields ``(stream, StreamOverflow,
+    0)`` on the failed lane's channel and keeps parsing every other lane
+    (fault isolation for multi-tenant serving).  The single-stream
+    :class:`StreamingParser` re-raises it, so legacy callers still see a
+    ``ValueError`` with the historical message.
+    """
+
+    def __init__(self, stream: int, n_bytes: int, capacity: int,
+                 n_streams: int = 1):
+        self.stream = int(stream)
+        self.n_bytes = int(n_bytes)
+        self.capacity = int(capacity)
+        super().__init__(
+            f"record longer than capacity ({n_bytes} > {capacity}); "
+            "increase max_carry_bytes"
+            + (f" [stream {stream}]" if n_streams > 1 else "")
+        )
+
+
 @dataclasses.dataclass
 class StreamStats:
     """Per-stream accounting.  Exact definitions:
@@ -83,6 +108,18 @@ class StreamStats:
         Largest carry that *survived* a partition (after the
         final-partition stale-carry drop), i.e. the minimum
         ``max_carry_bytes`` this stream would have needed.
+    ``flush_delims``
+        Synthetic flush delimiters appended on-device (one per flush round
+        whose stream did not end on a record delimiter).  These bytes are
+        *parsed* but are not source bytes, so they are counted here and
+        **not** in ``bytes_in``: total device-parsed bytes for a stream are
+        exactly ``bytes_in + bytes_reparsed + flush_delims``, while GB/s
+        denominators should keep using ``bytes_in`` (each source byte once).
+    ``failed``
+        The stream hit a :class:`StreamOverflow` and its lane was retired
+        for the rest of the call; ``bytes_in``/``bytes_reparsed`` include
+        the overflowing round (the work was dispatched), but
+        ``partitions``/``records`` do not (nothing usable came back).
     """
 
     partitions: int = 0
@@ -90,6 +127,8 @@ class StreamStats:
     bytes_reparsed: int = 0
     records: int = 0
     max_carry: int = 0
+    flush_delims: int = 0
+    failed: bool = False
 
 
 class _StepAux(NamedTuple):
@@ -121,6 +160,10 @@ class _Feed:
         self._pb = partition_bytes
         self.exhausted = False
         self.flushed = False
+        #: Last non-PAD byte produced so far — the host mirror of the
+        #: device's flush-delimiter judgement (append one iff the stream's
+        #: last payload byte is not already a record delimiter).
+        self.last_payload: Optional[int] = None
 
     def next_take(self) -> Optional[Tuple[bytes, bool]]:
         if self.flushed:
@@ -134,7 +177,15 @@ class _Feed:
         flush = self.exhausted and not self._buf
         if flush:
             self.flushed = True
+        payload = take.rstrip(bytes([PAD_BYTE]))
+        if payload:
+            self.last_payload = payload[-1]
         return take, flush
+
+    def kill(self) -> None:
+        """Retire the lane (fault isolation): subsequent ``next_take``
+        calls return ``None`` and the lane goes inert."""
+        self.flushed = True
 
 
 class StreamSession:
@@ -152,7 +203,17 @@ class StreamSession:
         (leading ``vmap`` axis of the step; per-stream carry state).
 
     ``stats`` is one :class:`StreamStats` per stream, accumulated across
-    ``parse_streams`` calls (carry state resets per call).
+    ``parse_streams`` calls (carry state resets per call); ``call_stats``
+    is the same accounting reset at the start of every ``parse_streams``
+    call — what a serving layer reports per tenant per batch.
+
+    A session drives ONE ``parse_streams`` generator at a time: its carry
+    buffers are donated between rounds and a dispatched round may still be
+    in flight when the generator is abandoned, so re-entry is guarded by a
+    state machine (``idle`` → ``active`` → ``idle`` | ``dirty``).  A
+    generator that exits abnormally (caller ``break``/``close`` or an
+    exception) leaves the session ``dirty``; call :meth:`reset` to settle
+    the in-flight round and return to ``idle``.
     """
 
     def __init__(self, parser: Parser, partition_bytes: int,
@@ -181,6 +242,11 @@ class StreamSession:
                          for _ in range(2)]
         self._staging_idx = 0
         self.stats: Tuple[StreamStats, ...] = tuple(StreamStats() for _ in range(S))
+        self.call_stats: Tuple[StreamStats, ...] = tuple(
+            StreamStats() for _ in range(S))
+        self._state = "idle"        # idle | active | dirty
+        self._failed = [False] * S  # per-lane fault flags, reset per call
+        self._inflight = None       # last dispatched round's device outputs
         self._step = self._build_step()
 
     # -- the donated per-partition device step -------------------------------
@@ -240,6 +306,7 @@ class StreamSession:
         fresh_len = np.zeros(S, np.int32)
         flush = np.zeros(S, bool)
         active = [False] * S
+        delims = [False] * S
         for s, feed in enumerate(feeds):
             nt = feed.next_take()
             if nt is None:
@@ -253,10 +320,21 @@ class StreamSession:
             fresh_len[s] = raw.size
             flush[s] = fl
             active[s] = True
+            if fl:
+                # Host mirror of the device's flush-delimiter judgement
+                # (for stats only — the device decides independently): a
+                # delimiter is appended iff the stream's last payload byte
+                # is not already a record delimiter.  The carry is always a
+                # contiguous suffix of consumed bytes, so the buffer's last
+                # payload byte equals the stream-wide one.
+                delims[s] = (
+                    feed.last_payload is not None
+                    and feed.last_payload != self.parser.cfg.record_delim_byte
+                )
         if not any(active):
             return None
         fresh = jax.device_put(staging if S > 1 else staging[0])
-        return fresh, fresh_len, flush, active
+        return fresh, fresh_len, flush, active, delims
 
     # -- the dispatch-ahead loop ---------------------------------------------
     def parse_streams(
@@ -273,41 +351,101 @@ class StreamSession:
         host.  Only records ``[0, n_complete)`` of each result are
         complete; the trailing bytes re-appear in the stream's next
         partition.
+
+        **Fault isolation**: a lane whose record exceeds the capacity
+        yields ``(stream, StreamOverflow, 0)`` once, is retired for the
+        rest of the call (its remaining source is not consumed, its stats
+        are finalized with ``failed=True``), and every other lane parses
+        to completion exactly as if the failed lane had never been there.
+        No exception crosses lane boundaries.
         """
+        if self._state != "idle":
+            raise RuntimeError(
+                f"StreamSession is {self._state!r}: a previous parse_streams "
+                "generator is still open or exited abnormally; exhaust/close "
+                "it and call reset() before reuse"
+            )
         S = self.n_streams
         sources = list(sources)
         if len(sources) != S:
             raise ValueError(f"expected {S} sources, got {len(sources)}")
-        feeds = [_Feed(src, self.partition_bytes) for src in sources]
-        carry_buf, carry_len = self._init_carry()
-        carry_known = [0] * S   # host mirror of carry_len, one round behind
-        pending = None
-        while True:
-            staged = self._stage_round(feeds)
-            if staged is None:
-                break
-            fresh, fresh_len, flush, active = staged
-            result, carry_buf, carry_len, aux = self._step(
-                carry_buf, carry_len, fresh,
-                jnp.asarray(fresh_len if S > 1 else fresh_len[0]),
-                jnp.asarray(flush if S > 1 else flush[0]),
-            )
+        self._state = "active"
+        self.call_stats = tuple(StreamStats() for _ in range(S))
+        self._failed = [False] * S
+        done = False
+        try:
+            feeds = [_Feed(src, self.partition_bytes) for src in sources]
+            carry_buf, carry_len = self._init_carry()
+            carry_known = [0] * S  # host mirror of carry_len, one round behind
+            pending = None
+            while True:
+                staged = self._stage_round(feeds)
+                if staged is None:
+                    break
+                fresh, fresh_len, flush, active, delims = staged
+                # Drop the in-flight record before dispatch: the step donates
+                # the previous round's carry outputs, so they must not be
+                # retained (reset() would try to block on dead buffers).
+                self._inflight = None
+                result, carry_buf, carry_len, aux = self._step(
+                    carry_buf, carry_len, fresh,
+                    jnp.asarray(fresh_len if S > 1 else fresh_len[0]),
+                    jnp.asarray(flush if S > 1 else flush[0]),
+                )
+                self._inflight = (result, carry_buf, carry_len, aux)
+                if pending is not None:
+                    yield from self._drain(pending, carry_known, feeds)
+                pending = (result, aux, fresh_len, flush, active, delims)
             if pending is not None:
-                yield from self._drain(pending, carry_known)
-            pending = (result, aux, fresh_len, flush, active)
-        if pending is not None:
-            yield from self._drain(pending, carry_known)
+                yield from self._drain(pending, carry_known, feeds)
+            done = True
+        finally:
+            if done:
+                self._state = "idle"
+                self._inflight = None
+            else:
+                # Abandoned mid-stream (caller break/close or an exception):
+                # a dispatched round may still be in flight against donated
+                # carry — refuse silent reuse until reset().
+                self._state = "dirty"
 
-    def _drain(self, pending, carry_known: List[int]):
+    def reset(self) -> None:
+        """Settle an abnormally-exited session back to ``idle``.
+
+        Blocks on the last dispatched round (so no computation is still
+        writing into the donated carry buffers), drops it, and clears the
+        state guard.  Cumulative ``stats`` are preserved; the next
+        ``parse_streams`` call re-initialises carry state as always.  A
+        session with a still-open generator must have it closed first.
+        """
+        if self._state == "active":
+            raise RuntimeError(
+                "cannot reset a StreamSession with an open parse_streams "
+                "generator; close it first"
+            )
+        if self._inflight is not None:
+            try:
+                jax.block_until_ready(self._inflight)
+            except Exception:
+                pass  # donated-away buffers: already settled by definition
+            self._inflight = None
+        self._state = "idle"
+
+    def _drain(self, pending, carry_known: List[int], feeds: List[_Feed]):
         """Fetch one round's scalars (the one-behind read) and yield its
-        per-stream results."""
-        result, aux, fresh_len, flush, active = pending
+        per-stream results; overflowing lanes yield a typed
+        :class:`StreamOverflow` and are retired without disturbing the
+        rest of the batch."""
+        result, aux, fresh_len, flush, active, delims = pending
         aux_np = _device_get(aux)
         n_records = np.atleast_1d(aux_np.n_records)
         last_end = np.atleast_1d(aux_np.last_record_end)
         overflow = np.atleast_1d(aux_np.overflow)
         for s in range(self.n_streams):
-            if not active[s]:
+            if not active[s] or self._failed[s]:
+                # Inert lane, or a failed lane's already-dispatched round
+                # (dispatch runs one ahead of the drain that detects the
+                # overflow): its buffer contents are garbage — suppress.
                 continue
             take_len, carry_in = int(fresh_len[s]), carry_known[s]
             if take_len == 0 and carry_in == 0:
@@ -317,23 +455,35 @@ class StreamSession:
                 carry_known[s] = 0
                 continue
             if bool(overflow[s]):
-                n_bytes = carry_in + take_len + (1 if flush[s] else 0)
-                raise ValueError(
-                    f"record longer than capacity ({n_bytes} > "
-                    f"{self.capacity}); increase max_carry_bytes"
-                    + (f" [stream {s}]" if self.n_streams > 1 else "")
-                )
+                # Per-lane fault: the splice wrapped, this lane's buffer is
+                # garbage.  Retire the lane (its feed stops producing; the
+                # next parse_streams call re-inits carry device-side) and
+                # report on this stream's channel only.
+                err = StreamOverflow(
+                    s, carry_in + take_len + (1 if flush[s] else 0),
+                    self.capacity, self.n_streams)
+                self._failed[s] = True
+                feeds[s].kill()
+                carry_known[s] = 0
+                for st in (self.stats[s], self.call_stats[s]):
+                    st.bytes_in += take_len
+                    st.bytes_reparsed += carry_in
+                    st.failed = True
+                yield s, err, 0
+                continue
             # Mirror of extract_carry: the carry length re-derived from
             # host-known values + the fetched boundary (the donated device
             # carry_len itself is never read back).
             carry_out = 0 if flush[s] else max(
                 carry_in + take_len - (int(last_end[s]) + 1), 0)
-            st = self.stats[s]
-            st.partitions += 1
-            st.bytes_in += take_len
-            st.bytes_reparsed += carry_in
-            st.records += int(n_records[s])
-            st.max_carry = max(st.max_carry, carry_out)
+            for st in (self.stats[s], self.call_stats[s]):
+                st.partitions += 1
+                st.bytes_in += take_len
+                st.bytes_reparsed += carry_in
+                st.records += int(n_records[s])
+                st.max_carry = max(st.max_carry, carry_out)
+                if flush[s] and delims[s]:
+                    st.flush_delims += 1
             carry_known[s] = carry_out
             yield s, self._slice_result(result, s), int(n_records[s])
 
@@ -400,10 +550,28 @@ class StreamingParser:
         trailing bytes re-appear at the front of the next partition.
         """
         if self.engine == "device":
-            for _s, result, n in self._session.parse_streams([source]):
-                yield result, n
+            gen = self._session.parse_streams([source])
+            try:
+                for _s, result, n in gen:
+                    if isinstance(result, StreamOverflow):
+                        # Single-stream legacy contract: overflow raises
+                        # (it is a ValueError subclass with the historical
+                        # message).  Batched callers use StreamSession and
+                        # get the per-lane typed-result contract instead.
+                        raise result
+                    yield result, n
+            finally:
+                gen.close()
+                if self._session._state == "dirty":
+                    self._session.reset()
         else:
             yield from self._parse_stream_host(source)
+
+    def reset(self) -> None:
+        """Settle the underlying session after an abnormal exit
+        (device engine only; the host engine is stateless per call)."""
+        if self.engine == "device":
+            self._session.reset()
 
     # -- legacy host-carry engine (the bit-identity oracle) ------------------
     def _buf_to_chunks(self, buf: bytes, final: bool) -> np.ndarray:
@@ -425,12 +593,11 @@ class StreamingParser:
                 if raw.size >= self.capacity:
                     # The carry consumed the slot reserved for the flush
                     # delimiter (a single record filled the whole buffer).
-                    raise ValueError(
-                        f"record longer than capacity ({raw.size + 1} > "
-                        f"{self.capacity}); increase max_carry_bytes"
-                    )
+                    self.stats.failed = True
+                    raise StreamOverflow(0, raw.size + 1, self.capacity)
                 out[raw.size] = self.parser.cfg.record_delim_byte
                 self._staged = raw.size + 1
+                self.stats.flush_delims += 1
         return out.reshape(-1, k)
 
     def _parse_stream_host(self, source: Iterable[bytes]):
@@ -452,10 +619,8 @@ class StreamingParser:
             final = exhausted and not buf
             full = carry + take
             if len(full) > self.capacity:
-                raise ValueError(
-                    f"record longer than capacity ({len(full)} > {self.capacity}); "
-                    "increase max_carry_bytes"
-                )
+                self.stats.failed = True
+                raise StreamOverflow(0, len(full), self.capacity)
             chunks = self._buf_to_chunks(full, final)
             # The host-carry sync: fetching the carry boundary blocks on the
             # partition's parse — the serialisation StreamSession removes.

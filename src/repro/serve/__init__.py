@@ -1,0 +1,26 @@
+"""Multi-tenant parse service over the streaming engine (ROADMAP item 2).
+
+``PlanRegistry`` shares compiled executables among tenants with equal plan
+keys; ``ParseService`` is the long-lived front end — admission/batching
+into the vmapped stream axis with recompile tiers, bounded-queue
+backpressure, per-tenant stats, and per-tenant fault isolation.
+"""
+from repro.serve.registry import PlanRegistry
+from repro.serve.service import (
+    ByteQueue,
+    ParseService,
+    Tenant,
+    TenantError,
+    TenantOverflow,
+    TenantResult,
+)
+
+__all__ = [
+    "ByteQueue",
+    "ParseService",
+    "PlanRegistry",
+    "Tenant",
+    "TenantError",
+    "TenantOverflow",
+    "TenantResult",
+]

@@ -1,0 +1,78 @@
+"""Executable registry for the multi-tenant parse service.
+
+Tenants hand the service a :class:`~repro.core.parser.ParserConfig` each;
+compiling one parser (and one streaming session per batch width) per
+*tenant* would make admission O(compile).  The registry instead keys
+everything on :func:`repro.core.stages.plan_key` — the conservative
+fingerprint of the executable a config traces to — so tenants with
+compatible schemas share ONE compiled :class:`Parser`, and sessions are
+additionally keyed on their static geometry ``(partition_bytes,
+max_carry_bytes, n_streams)``.  With the service's recompile tiers
+(``n_streams`` drawn from S∈{1,4,16,64} instead of the exact tenant
+count) the steady state compiles a handful of executables total, however
+many tenants pass through.
+
+Thread-safe: the service's dispatcher and worker threads share one
+registry.  ``parser_builds`` / ``session_builds`` count cache misses —
+tests pin tier/recompile behaviour on them (alongside jit's own
+``_cache_size``).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.core import backends as backends_mod
+from repro.core import stages as stages_mod
+from repro.core.parser import Parser
+from repro.core.streaming import StreamSession
+
+
+class PlanRegistry:
+    """Plan-keyed cache of compiled :class:`Parser`\\ s and
+    :class:`StreamSession`\\ s (see module docstring)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._parsers: Dict[Tuple, Parser] = {}
+        self._sessions: Dict[Tuple, StreamSession] = {}
+        self.parser_builds = 0
+        self.session_builds = 0
+
+    def key(self, cfg) -> Tuple:
+        """The sharing key for ``cfg`` (see ``stages.plan_key``)."""
+        return stages_mod.plan_key(
+            cfg, backends_mod.get_backend(cfg.backend))
+
+    def parser(self, cfg, key: Optional[Tuple] = None) -> Tuple[Tuple, Parser]:
+        """The shared parser for ``cfg``'s plan key (built on first use)."""
+        k = key if key is not None else self.key(cfg)
+        with self._lock:
+            p = self._parsers.get(k)
+            if p is None:
+                p = Parser(cfg)
+                self._parsers[k] = p
+                self.parser_builds += 1
+        return k, p
+
+    def session(self, cfg, partition_bytes: int, max_carry_bytes: int,
+                n_streams: int, key: Optional[Tuple] = None
+                ) -> Tuple[Tuple, StreamSession]:
+        """The shared session for ``cfg``'s plan key at this geometry.
+
+        One session per ``(plan_key, partition_bytes, max_carry_bytes,
+        n_streams)`` — its jitted step (and the step's jit cache) is reused
+        across every batch the service runs at that width.
+        """
+        k, parser = self.parser(cfg, key)
+        sk = (k, int(partition_bytes), int(max_carry_bytes), int(n_streams))
+        with self._lock:
+            s = self._sessions.get(sk)
+            if s is None:
+                s = StreamSession(
+                    parser, partition_bytes,
+                    max_carry_bytes=max_carry_bytes, n_streams=n_streams,
+                )
+                self._sessions[sk] = s
+                self.session_builds += 1
+        return sk, s

@@ -1,0 +1,362 @@
+"""Multi-tenant parse service — a long-lived serving layer over
+:class:`~repro.core.streaming.StreamSession` (ROADMAP's "millions of
+users" axis, in the shape of an inference serving stack: a driver in
+front of a registry of compiled executables).
+
+Design:
+
+* **Registry sharing** — tenants are grouped by
+  :func:`repro.core.stages.plan_key` + session geometry; every group
+  shares one compiled :class:`Parser` and one :class:`StreamSession` per
+  batch width (:class:`~repro.serve.registry.PlanRegistry`).
+
+* **Admission / tier batching** — the dispatcher packs waiting tenants of
+  one group into the vmapped ``n_streams`` axis.  The batch width is the
+  smallest *recompile tier* (default S∈{1,4,16,64}) that fits the group,
+  so the service compiles a handful of step widths total instead of one
+  per tenant count; spare lanes run inert (empty sources).  A group whose
+  session is mid-batch waits — new tenants are admitted onto the same
+  session (and the failed tenants' lanes) as soon as it frees.
+
+* **Thread/queue front end** — ingest, dispatch, and fetch overlap:
+  each batch runs on a worker thread driving the session's own
+  dispatch-ahead loop; per-tenant results flow through bounded queues
+  (``queue.Queue(maxsize=...)``) whose blocking ``put`` is the
+  backpressure — a slow consumer stalls its producer, bytes and results
+  are never dropped.  Push-model tenants feed a :class:`ByteQueue`
+  (bounded the same way, toward the producer) instead of a pull iterable.
+
+* **Fault isolation** — the engine contract
+  (:class:`~repro.core.streaming.StreamOverflow`, see
+  ``core/streaming.py``) guarantees an overflowing lane fails alone; the
+  service maps that lane fault onto the owning tenant's channel as a
+  :class:`TenantOverflow` and every other tenant of the batch completes
+  untouched.  No exception crosses tenant boundaries; engine-level faults
+  outside the per-lane contract surface as :class:`TenantError` on every
+  unfinished tenant of the batch and the session is reset.
+
+Synchronous mode (``start=False`` + :meth:`ParseService.step`) runs one
+admission decision per call on the caller's thread — what the tests use
+to pin scheduling deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+
+from repro.core.parser import ParseResult
+from repro.core.streaming import StreamOverflow, StreamStats
+from repro.serve.registry import PlanRegistry
+
+_EOS = object()
+
+
+@dataclasses.dataclass
+class TenantResult:
+    """One parsed partition on a tenant's channel (records ``[0, n)``)."""
+    tenant: str
+    result: ParseResult
+    n_records: int
+
+
+@dataclasses.dataclass
+class TenantOverflow:
+    """The tenant's record exceeded its session capacity: the tenant is
+    failed and its lane retired for the batch — other tenants continue."""
+    tenant: str
+    error: StreamOverflow
+
+
+@dataclasses.dataclass
+class TenantError:
+    """An engine fault outside the per-lane overflow contract aborted the
+    tenant's batch (the session was reset; other *batches* continue)."""
+    tenant: str
+    error: BaseException
+
+
+class ByteQueue:
+    """Bounded push-model ingest source.
+
+    Producers :meth:`write` byte chunks and :meth:`close`; the parsing
+    side iterates.  ``write`` blocks while the queue holds ``max_chunks``
+    undelivered chunks — backpressure to the producer; nothing is ever
+    dropped.
+    """
+
+    def __init__(self, max_chunks: int = 16):
+        self._q: "queue.Queue" = queue.Queue(maxsize=int(max_chunks))
+        self._closed = False
+
+    def write(self, data: bytes) -> None:
+        if self._closed:
+            raise ValueError("write to closed ByteQueue")
+        self._q.put(bytes(data))
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._q.put(_EOS)
+
+    def __iter__(self) -> Iterator[bytes]:
+        while True:
+            item = self._q.get()
+            if item is _EOS:
+                return
+            yield item
+
+
+class Tenant:
+    """Per-tenant handle: result channel + finalized stats.
+
+    ``results()`` yields :class:`TenantResult` / :class:`TenantOverflow` /
+    :class:`TenantError` in partition order and returns when the tenant's
+    stream completes (or fails); ``wait()`` blocks until then and returns
+    the tenant's :class:`StreamStats` for its batch.  The channel is a
+    bounded queue: a consumer that stops reading stalls the service's
+    worker on this tenant's lane results (backpressure, never drops).
+    """
+
+    def __init__(self, name: str, cfg, source, partition_bytes: int,
+                 max_carry_bytes: int, max_queued: int):
+        self.name = name
+        self.cfg = cfg
+        self.source = source
+        self.partition_bytes = int(partition_bytes)
+        self.max_carry_bytes = int(max_carry_bytes)
+        self.group: Tuple = ()          # (plan_key, geometry) — set at submit
+        self.lane: Optional[int] = None          # lane of the batch it ran in
+        self.session_key: Optional[Tuple] = None  # registry key of that session
+        self.stats: Optional[StreamStats] = None  # finalized per-batch stats
+        self.failed = False
+        self.submitted = 0.0            # monotonic admission timestamp
+        self._q: "queue.Queue" = queue.Queue(maxsize=int(max_queued))
+        self._done = threading.Event()
+
+    def results(self) -> Iterator[Union[TenantResult, TenantOverflow, TenantError]]:
+        while True:
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if self._done.is_set():
+                    return
+                continue
+            yield item
+
+    def wait(self, timeout: Optional[float] = None) -> StreamStats:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"tenant {self.name!r} not done after {timeout}s")
+        assert self.stats is not None
+        return self.stats
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def _finish(self, stats: StreamStats) -> None:
+        self.stats = stats
+        self.failed = self.failed or stats.failed
+        self._done.set()  # results() drains the queue, then terminates
+
+
+class ParseService:
+    """The multi-tenant parse service (see module docstring).
+
+    Args:
+      tiers: allowed batch widths (``n_streams``), ascending.  A batch of
+        *n* compatible tenants runs at the smallest tier ≥ *n* (groups
+        larger than the top tier split across batches).
+      max_queued_partitions: per-tenant result-channel bound (the
+        backpressure depth).
+      admission_wait: how long the dispatcher holds a group open for
+        late-arriving compatible tenants before launching its batch.
+      start: spawn the dispatcher thread.  ``start=False`` gives the
+        synchronous test mode — call :meth:`step` to run one admission
+        decision (and its whole batch) on the calling thread.
+    """
+
+    DEFAULT_TIERS = (1, 4, 16, 64)
+
+    def __init__(self, *, tiers: Sequence[int] = DEFAULT_TIERS,
+                 max_queued_partitions: int = 8,
+                 admission_wait: float = 0.02, start: bool = True):
+        self.tiers = tuple(sorted(int(t) for t in tiers))
+        if not self.tiers or self.tiers[0] < 1:
+            raise ValueError(f"tiers must be positive, got {tiers}")
+        self.max_queued_partitions = int(max_queued_partitions)
+        self.admission_wait = float(admission_wait)
+        self.registry = PlanRegistry()
+        self._cv = threading.Condition()
+        self._pending: List[Tenant] = []
+        self._busy: set = set()          # groups with a batch in flight
+        self._workers: List[threading.Thread] = []
+        self._closed = False
+        self._seq = itertools.count()
+        self._dispatcher: Optional[threading.Thread] = None
+        if start:
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, name="parse-service-dispatch",
+                daemon=True)
+            self._dispatcher.start()
+
+    # -- front door ----------------------------------------------------------
+    def submit(self, cfg, source, *, partition_bytes: int,
+               max_carry_bytes: Optional[int] = None,
+               name: Optional[str] = None) -> Tenant:
+        """Admit a tenant: parse ``source`` (an iterable of byte chunks, a
+        :class:`ByteQueue`, or plain ``bytes``) under ``cfg`` in
+        ``partition_bytes`` takes.  Returns the tenant's handle
+        immediately; results stream on its channel."""
+        if isinstance(source, (bytes, bytearray, memoryview)):
+            source = [bytes(source)]
+        t = Tenant(
+            name or f"tenant-{next(self._seq)}", cfg, source,
+            partition_bytes, max_carry_bytes or partition_bytes,
+            self.max_queued_partitions,
+        )
+        # Resolved at submit so an invalid config fails the caller here,
+        # not a worker thread later.
+        t.group = (self.registry.key(cfg), t.partition_bytes, t.max_carry_bytes)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("ParseService is closed")
+            t.submitted = time.monotonic()
+            self._pending.append(t)
+            self._cv.notify_all()
+        return t
+
+    def tier_for(self, n: int) -> int:
+        """Smallest tier ≥ n (the top tier for oversized groups)."""
+        for t in self.tiers:
+            if t >= n:
+                return t
+        return self.tiers[-1]
+
+    # -- scheduling ----------------------------------------------------------
+    def _take_batch_locked(self, flush: bool = False):
+        """One admission decision (holding ``_cv``): the oldest pending
+        group whose session is free and whose admission window has
+        elapsed (or that already fills the top tier).  Returns
+        ``(group, batch)`` or ``None``."""
+        now = time.monotonic()
+        seen = set()
+        for t in self._pending:
+            g = t.group
+            if g in seen:
+                continue
+            seen.add(g)
+            if g in self._busy:
+                continue
+            members = [u for u in self._pending if u.group == g]
+            ready = (flush or self._closed
+                     or len(members) >= self.tiers[-1]
+                     or now - members[0].submitted >= self.admission_wait)
+            if not ready:
+                continue
+            batch = members[: self.tiers[-1]]
+            for u in batch:
+                self._pending.remove(u)
+            self._busy.add(g)
+            return g, batch
+        return None
+
+    def step(self) -> Optional[List[Tenant]]:
+        """Synchronous mode: run one admission decision and its whole
+        batch on the calling thread.  Returns the tenants served, or
+        ``None`` if nothing was eligible.
+
+        The batch's result channels are unbounded for the call: with no
+        concurrent consumer, a bounded ``put`` would deadlock the calling
+        thread — backpressure is a property of the threaded front end.
+        """
+        with self._cv:
+            picked = self._take_batch_locked(flush=True)
+        if picked is None:
+            return None
+        group, batch = picked
+        for t in batch:
+            t._q.maxsize = 0
+        self._run_batch(group, batch)
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    picked = self._take_batch_locked()
+                    if picked is not None:
+                        break
+                    if self._closed and not self._pending and not self._busy:
+                        return
+                    self._cv.wait(timeout=0.05)
+            group, batch = picked
+            w = threading.Thread(
+                target=self._run_batch, args=(group, batch),
+                name=f"parse-service-batch-{batch[0].name}", daemon=True)
+            self._workers.append(w)
+            w.start()
+
+    # -- batch execution -----------------------------------------------------
+    def _run_batch(self, group: Tuple, batch: List[Tenant]) -> None:
+        key, partition_bytes, max_carry_bytes = group
+        tier = self.tier_for(len(batch))
+        skey, session = self.registry.session(
+            batch[0].cfg, partition_bytes, max_carry_bytes, tier, key=key)
+        for lane, t in enumerate(batch):
+            t.lane, t.session_key = lane, skey
+        # Spare lanes run inert: empty source → one empty flush round.
+        sources = [t.source for t in batch] + [()] * (tier - len(batch))
+        finished = [False] * len(batch)
+        gen = session.parse_streams(sources)
+        try:
+            for lane, result, n in gen:
+                if lane >= len(batch):
+                    continue
+                t = batch[lane]
+                if isinstance(result, StreamOverflow):
+                    # Per-lane fault → this tenant's channel only; the
+                    # session keeps every other lane running.
+                    t.failed = True
+                    t._q.put(TenantOverflow(t.name, result))
+                else:
+                    t._q.put(TenantResult(t.name, result, n))
+            for lane, t in enumerate(batch):
+                t._finish(dataclasses.replace(session.call_stats[lane]))
+                finished[lane] = True
+        except BaseException as e:
+            # Outside the per-lane contract (bad source iterable, engine
+            # bug, ...): fail the batch's unfinished tenants, settle the
+            # session for the next batch, keep the service alive.
+            for lane, t in enumerate(batch):
+                if not finished[lane]:
+                    t.failed = True
+                    t._q.put(TenantError(t.name, e))
+                    t._finish(StreamStats(failed=True))
+            gen.close()
+            session.reset()
+        finally:
+            with self._cv:
+                self._busy.discard(group)
+                self._cv.notify_all()
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self, wait: bool = True) -> None:
+        """Stop admissions; with ``wait`` drain pending/in-flight batches."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if wait:
+            if self._dispatcher is not None:
+                self._dispatcher.join()
+            for w in self._workers:
+                w.join()
+
+    def __enter__(self) -> "ParseService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(wait=True)

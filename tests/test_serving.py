@@ -1,69 +1,310 @@
-"""Serving engine: continuous batching correctness vs unbatched greedy
-oracle, slot reuse, and the active-mask invariants."""
-import dataclasses
+"""Multi-tenant parse service (serve/): registry sharing, tier scheduling
++ recompile pinning, backpressure, per-tenant stats under ragged
+lifetimes, and the ISSUE-7 acceptance run — one tenant's overflow leaves
+the other tenants of the batch bit-identical to their solo runs, and the
+failed tenant's lane serves a newly admitted tenant in the same service
+lifetime.
 
-import jax
-import jax.numpy as jnp
+Scheduling-sensitive tests run the service synchronously
+(``start=False`` + ``step()``) so admission decisions are deterministic;
+the threaded front end is exercised where the behaviour under test *is*
+the overlap (backpressure, ByteQueue ingest).
+"""
+import threading
+import time
+
 import numpy as np
 import pytest
 
-from repro.configs import get_config
-from repro.models.model import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core.streaming import StreamOverflow, StreamSession, StreamingParser
+from repro.serve import (
+    ByteQueue,
+    ParseService,
+    TenantOverflow,
+    TenantResult,
+)
+from tests.conftest import random_csv_table
+
+SCHEMA = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"))
+DTYPES = ("int32", "str", "float32")
+ALT_SCHEMA = Schema.of(("x", "str"), ("y", "int32"))
 
 
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = dataclasses.replace(get_config("qwen2-1.5b", reduced=True),
-                              param_dtype=jnp.float32)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
+def _cfg(schema=SCHEMA, **kw):
+    kw.setdefault("max_records", 32)
+    kw.setdefault("chunk_size", 32)
+    return ParserConfig(dfa=make_csv_dfa(), schema=schema, **kw)
 
 
-def _oracle(model, params, prompt, n_new):
-    state = model.init_decode_state(1, max_seq=64)
-    step = jax.jit(model.decode_step)
-    logits = None
-    for t in prompt:
-        logits, state = step(params, jnp.asarray([t], jnp.int32), state)
-    out = []
-    tok = int(jnp.argmax(logits[0]))
-    for _ in range(n_new):
-        out.append(tok)
-        logits, state = step(params, jnp.asarray([tok], jnp.int32), state)
-        tok = int(jnp.argmax(logits[0]))
-    return out
+def _drain(tenant):
+    """Consume a tenant's channel; return (results, overflows, errors)."""
+    res, ovf, err = [], [], []
+    for item in tenant.results():
+        (res if isinstance(item, TenantResult)
+         else ovf if isinstance(item, TenantOverflow) else err).append(item)
+    return res, ovf, err
 
 
-def test_continuous_batching_matches_oracle(small_model, rng):
-    cfg, model, params = small_model
-    engine = ServeEngine(model, params, slots=3, max_seq=64)
-    prompts = [rng.integers(3, cfg.vocab, size=int(rng.integers(2, 7))).astype(np.int32)
-               for _ in range(7)]  # 7 requests > 3 slots → slot reuse
-    for i, p in enumerate(prompts):
-        engine.submit(Request(rid=i, prompt=p, max_new_tokens=5))
-    finished = engine.run_until_done()
-    assert len(finished) == 7
-    for rid, toks in finished.items():
-        want = _oracle(model, params, prompts[rid].tolist(), len(toks) - 1)
-        assert list(toks[1:]) == want[: len(toks) - 1], rid
+def test_registry_shares_one_executable_per_plan_key(rng):
+    """Two tenants with equal plan keys (independently built but identical
+    configs/DFAs) share ONE compiled parser and session; a differing
+    schema compiles a second executable."""
+    _, d = random_csv_table(rng, 10, DTYPES)
+    svc = ParseService(max_queued_partitions=128, start=False)
+    t0 = svc.submit(_cfg(), d, partition_bytes=256)
+    t1 = svc.submit(_cfg(), d, partition_bytes=256)   # fresh cfg + fresh Dfa
+    svc.step()
+    assert svc.registry.parser_builds == 1
+    assert svc.registry.session_builds == 1
+    assert t0.session_key == t1.session_key
+
+    _, alt = random_csv_table(rng, 10, ("str", "int32"))
+    t2 = svc.submit(_cfg(ALT_SCHEMA), alt, partition_bytes=256)
+    svc.step()
+    assert svc.registry.parser_builds == 2
+    assert t2.session_key != t0.session_key
+    for t in (t0, t1, t2):
+        res, ovf, err = _drain(t)
+        assert res and not ovf and not err
+        assert t.wait(5).records == 10
 
 
-def test_mixed_depth_slots(small_model, rng):
-    """Admitting a new request while others are mid-generation must not
-    disturb them (per-slot positions + active masks)."""
-    cfg, model, params = small_model
-    eng_ref = ServeEngine(model, params, slots=1, max_seq=64)
-    p0 = rng.integers(3, cfg.vocab, size=4).astype(np.int32)
-    eng_ref.submit(Request(rid=0, prompt=p0, max_new_tokens=6))
-    ref = eng_ref.run_until_done()[0]
+def test_tier_selection_and_recompile_count(rng):
+    """Batch width is the smallest tier ≥ group size, and the jitted step
+    compiles once per (plan key, tier) — pinned via the session step's own
+    jit cache, not wall-clock heuristics."""
+    _, d = random_csv_table(rng, 6, DTYPES)
+    svc = ParseService(tiers=(1, 4, 16), max_queued_partitions=128,
+                       start=False)
+    assert [svc.tier_for(n) for n in (1, 2, 4, 5, 16, 40)] == [1, 4, 4, 16, 16, 16]
 
-    eng = ServeEngine(model, params, slots=2, max_seq=64)
-    eng.submit(Request(rid=0, prompt=p0, max_new_tokens=6))
-    eng.tick()  # request 0 starts alone
-    eng.tick()
-    p1 = rng.integers(3, cfg.vocab, size=3).astype(np.int32)
-    eng.submit(Request(rid=1, prompt=p1, max_new_tokens=4))  # joins mid-flight
-    out = eng.run_until_done()
-    np.testing.assert_array_equal(out[0], ref)
+    # 3 tenants → tier 4: one session, spare lane inert
+    ts = [svc.submit(_cfg(), d, partition_bytes=128) for _ in range(3)]
+    svc.step()
+    assert svc.registry.session_builds == 1
+    (sk, sess), = svc.registry._sessions.items()
+    assert sk[-1] == 4 and sess.n_streams == 4
+    assert sess._step._cache_size() == 1
+    for t in ts:
+        assert t.wait(5).records == 6 and not t.failed
+
+    # a second wave at the same tier: same session, no recompile
+    ts2 = [svc.submit(_cfg(), d, partition_bytes=128) for _ in range(4)]
+    svc.step()
+    assert svc.registry.session_builds == 1
+    assert sess._step._cache_size() == 1
+    for t in ts2:
+        assert t.wait(5).records == 6
+
+    # a single tenant → tier 1: a second session (new width), one compile
+    t1 = svc.submit(_cfg(), d, partition_bytes=128)
+    svc.step()
+    assert svc.registry.session_builds == 2
+    assert t1.session_key[-1] == 1
+    assert t1.wait(5).records == 6
+
+
+def test_oversized_group_splits_across_batches(rng):
+    """More compatible tenants than the top tier: served across several
+    batches on the same top-tier session, nothing dropped."""
+    _, d = random_csv_table(rng, 3, DTYPES)
+    svc = ParseService(tiers=(1, 2), max_queued_partitions=128, start=False)
+    ts = [svc.submit(_cfg(), d, partition_bytes=128) for _ in range(5)]
+    steps = 0
+    while svc.step() is not None:
+        steps += 1
+    assert steps == 3                       # 2 + 2 + 1
+    assert svc.registry.session_builds <= 2  # tier-2 + tier-1 at most
+    for t in ts:
+        assert t.wait(5).records == 3
+
+
+def test_backpressure_bounded_queue_blocks_never_drops(rng):
+    """A consumer that stops reading stalls the worker at the queue bound;
+    once it resumes, every partition arrives in order — nothing dropped."""
+    _, d = random_csv_table(rng, 40, DTYPES)
+    svc = ParseService(max_queued_partitions=2, admission_wait=0.0, start=True)
+    try:
+        t = svc.submit(_cfg(), d, partition_bytes=64)
+        deadline = time.monotonic() + 60
+        while t._q.qsize() < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        # channel full, many partitions still unparsed → worker is blocked
+        assert t._q.qsize() == 2
+        time.sleep(0.2)
+        assert not t.done                   # stalled, not dropping
+        assert t._q.qsize() == 2            # bound held while we slept
+        res, ovf, err = _drain(t)           # resume consuming
+        assert not ovf and not err
+        st = t.wait(30)
+        assert st.records == 40
+        assert st.partitions == len(res) > 2
+        assert st.bytes_in == len(d)
+    finally:
+        svc.close()
+
+
+def test_bytequeue_ingest_backpressure():
+    """Push-model ingest: ByteQueue.write blocks at max_chunks (producer
+    backpressure), everything written is parsed after close()."""
+    rows = b"".join(b"%d,abc,1.5\n" % i for i in range(60))
+    chunks = [rows[i:i + 32] for i in range(0, len(rows), 32)]
+    q = ByteQueue(max_chunks=2)
+    progress = []
+
+    def produce():
+        for c in chunks:
+            q.write(c)
+            progress.append(len(c))
+        q.close()
+
+    svc = ParseService(admission_wait=0.0, start=True)
+    try:
+        producer = threading.Thread(target=produce, daemon=True)
+        producer.start()
+        time.sleep(0.1)
+        # before the service consumes, the bounded queue pins the producer
+        # at max_chunks in-flight writes (+1 possibly blocked in put)
+        assert len(progress) <= 3 < len(chunks)
+        t = svc.submit(_cfg(), q, partition_bytes=128)
+        producer.join(timeout=60)
+        assert not producer.is_alive()
+        res, ovf, err = _drain(t)
+        assert not ovf and not err
+        st = t.wait(30)
+        assert st.records == 60
+        assert st.bytes_in == len(rows) == sum(progress)
+    finally:
+        svc.close()
+
+
+def test_per_tenant_stats_ragged_lifetimes(rng):
+    """Tenants of one batch with very different stream lengths (including
+    an empty one) each get exactly their solo-run stats."""
+    datas = []
+    for n in (25, 3, 0):
+        if n:
+            _, d = random_csv_table(rng, n, DTYPES, quote_prob=0.5)
+        else:
+            d = b""
+        datas.append(d)
+    svc = ParseService(max_queued_partitions=128, start=False)
+    ts = [svc.submit(_cfg(), d, partition_bytes=96, max_carry_bytes=512)
+          for d in datas]
+    svc.step()
+    for t, d in zip(ts, datas):
+        solo = StreamingParser(Parser(_cfg()), 96, max_carry_bytes=512)
+        list(solo.parse_stream([d]))
+        st = t.wait(5)
+        for f in ("partitions", "bytes_in", "bytes_reparsed", "records",
+                  "max_carry", "flush_delims", "failed"):
+            assert getattr(st, f) == getattr(solo.stats, f), (t.name, f)
+
+
+def test_acceptance_overflow_isolated_lane_reclaimed(rng):
+    """ISSUE 7 acceptance: a 4-tenant batch where one tenant's record
+    exceeds carry capacity — the other 3 complete bit-identical to solo
+    StreamSession runs, the failed tenant gets a typed overflow result,
+    and its lane serves a newly admitted tenant in the same service
+    lifetime (same session object, no new compile)."""
+    datas = []
+    for n in (12, 6, 9):
+        _, d = random_csv_table(rng, n, DTYPES, quote_prob=0.5)
+        datas.append(d)
+    bad = b'7,"' + b"y" * 4000 + b'",1.5\n'
+    sources = [datas[0], bad, datas[1], datas[2]]
+
+    svc = ParseService(tiers=(1, 4), max_queued_partitions=128, start=False)
+    ts = [svc.submit(_cfg(), src, partition_bytes=128, max_carry_bytes=256,
+                     name=f"tenant{i}") for i, src in enumerate(sources)]
+    svc.step()
+
+    res1, ovf1, err1 = _drain(ts[1])
+    # rounds before the overflow may deliver (0-record) partitions; the
+    # typed overflow is the LAST thing on the failed tenant's channel
+    assert not err1 and len(ovf1) == 1
+    assert all(r.n_records == 0 for r in res1)
+    assert isinstance(ovf1[0].error, StreamOverflow)
+    assert ts[1].wait(5).failed and ts[1].failed
+
+    for i in (0, 2, 3):
+        # the solo oracle: a fresh single-stream session over the same bytes
+        solo_sess = StreamSession(Parser(_cfg()), 128, max_carry_bytes=256)
+        solo = [(r, n) for _s, r, n in solo_sess.parse_streams([[sources[i]]])]
+        res, ovf, err = _drain(ts[i])
+        assert not ovf and not err, i
+        assert len(res) == len(solo), i
+        for p, (item, (rq, nq)) in enumerate(zip(res, solo)):
+            assert item.n_records == nq, (i, p)
+            for f in ("css", "col_start", "col_count", "field_offset",
+                      "field_length", "end_state", "last_record_end"):
+                a = np.asarray(getattr(item.result, f))
+                b = np.asarray(getattr(rq, f))
+                assert np.array_equal(a, b), (i, p, f)
+        st = ts[i].wait(5)
+        for f in ("partitions", "bytes_in", "records", "max_carry"):
+            assert getattr(st, f) == getattr(solo_sess.stats[0], f), (i, f)
+
+    # lane reclaim: a fresh 4-tenant wave reuses the SAME tier-4 session —
+    # including the failed tenant's lane — with no new compile.
+    builds = svc.registry.session_builds
+    failed_lane = ts[1].lane
+    wave = [svc.submit(_cfg(), datas[2], partition_bytes=128,
+                       max_carry_bytes=256) for _ in range(4)]
+    svc.step()
+    assert svc.registry.session_builds == builds
+    reclaimed = [t for t in wave if t.lane == failed_lane]
+    assert len(reclaimed) == 1
+    for t in wave:
+        st = t.wait(5)
+        assert not t.failed and st.records == 9, t.name
+        assert t.session_key == ts[1].session_key
+
+
+def test_threaded_service_end_to_end(rng):
+    """The threaded front end: concurrent tenants over two schemas, one
+    induced overflow, consumed from separate threads — correct records
+    everywhere, no cross-tenant contamination."""
+    _, d_main = random_csv_table(rng, 20, DTYPES, quote_prob=0.5)
+    _, d_alt = random_csv_table(rng, 14, ("str", "int32"))
+    bad = b'1,"' + b"z" * 4000 + b'",2.5\n'
+    svc = ParseService(admission_wait=0.05, start=True)
+    got = {}
+
+    def consume(t):
+        res, ovf, err = _drain(t)
+        got[t.name] = (sum(r.n_records for r in res), len(ovf), len(err))
+
+    try:
+        tenants = [
+            svc.submit(_cfg(), d_main, partition_bytes=128,
+                       max_carry_bytes=256, name="m0"),
+            svc.submit(_cfg(), d_main, partition_bytes=128,
+                       max_carry_bytes=256, name="m1"),
+            svc.submit(_cfg(ALT_SCHEMA), d_alt, partition_bytes=128,
+                       max_carry_bytes=256, name="alt"),
+            svc.submit(_cfg(), bad, partition_bytes=128,
+                       max_carry_bytes=256, name="bad"),
+        ]
+        threads = [threading.Thread(target=consume, args=(t,), daemon=True)
+                   for t in tenants]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=300)
+            assert not th.is_alive()
+        assert got["m0"] == (20, 0, 0)
+        assert got["m1"] == (20, 0, 0)
+        assert got["alt"] == (14, 0, 0)
+        assert got["bad"][1:] == (1, 0) and got["bad"][0] == 0
+        assert svc.registry.parser_builds == 2   # SCHEMA + ALT_SCHEMA
+    finally:
+        svc.close()
+
+
+def test_submit_after_close_raises():
+    svc = ParseService(start=False)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(_cfg(), b"1,a,2.0\n", partition_bytes=64)

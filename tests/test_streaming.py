@@ -12,7 +12,7 @@ import pytest
 
 from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
 from repro.core import streaming as streaming_mod
-from repro.core.streaming import StreamSession, StreamingParser
+from repro.core.streaming import StreamOverflow, StreamSession, StreamingParser
 from tests.conftest import random_csv_table
 
 SCHEMA = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"), ("d", "date"))
@@ -191,7 +191,8 @@ def _assert_results_equal(r, q, label=""):
 
 
 def _assert_stats_equal(a, b, label=""):
-    for f in ("partitions", "bytes_in", "bytes_reparsed", "records", "max_carry"):
+    for f in ("partitions", "bytes_in", "bytes_reparsed", "records",
+              "max_carry", "flush_delims", "failed"):
         assert getattr(a, f) == getattr(b, f), \
             f"{label}stats.{f}: {getattr(a, f)} != {getattr(b, f)}"
 
@@ -444,14 +445,173 @@ def test_multistream_batched_vs_sequential(rng, backend):
         _assert_stats_equal(sp.stats, sess.stats[s], label=f"{backend}/stream{s}: ")
 
 
-def test_multistream_overflow_names_stream():
+def test_multistream_overflow_typed_result_names_stream():
+    """A batched lane overflow is a per-lane typed result, not a session
+    exception: the failed lane yields a StreamOverflow (a ValueError
+    subclass carrying stream/n_bytes/capacity and the historical message)
+    and the session completes."""
     cfg = ParserConfig(dfa=make_csv_dfa(), schema=Schema.of(("a", "str"),),
                        max_records=4, chunk_size=16)
     sess = StreamSession(Parser(cfg), 32, max_carry_bytes=32, n_streams=2)
     ok = b"1\n2\n"
     bad = b'"' + b"y" * 500 + b'"\n'
-    with pytest.raises(ValueError, match=r"record longer than capacity.*stream 1"):
-        list(sess.parse_streams([[ok], [bad]]))
+    overflows = [(s, r) for s, r, _ in sess.parse_streams([[ok], [bad]])
+                 if isinstance(r, StreamOverflow)]
+    assert len(overflows) == 1
+    s, err = overflows[0]
+    assert s == err.stream == 1
+    assert err.capacity == sess.capacity and err.n_bytes > sess.capacity
+    assert isinstance(err, ValueError)
+    import re
+    assert re.search(r"record longer than capacity.*stream 1", str(err))
+    assert sess.stats[1].failed and not sess.stats[0].failed
+    assert sess.stats[0].records == 2
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas-fused"])
+def test_multistream_overflow_isolation(rng, backend):
+    """THE fault-isolation regression (ISSUE 7): stream 1 of 4 overflows
+    mid-stream; streams 0/2/3 must parse to completion bit-identical to
+    their solo runs — results, counts, and stats — with the failed lane
+    reporting exactly one typed StreamOverflow, its stats finalized
+    (failed=True, overflowing round's bytes counted, no partitions), and
+    the session left reusable (idle) for the next batch."""
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=32,
+                       chunk_size=32, **_backend_kw(backend))
+    datas = []
+    for n_rows in (15, 9, 4):
+        _, d = random_csv_table(rng, n_rows, DTYPES, quote_prob=0.6,
+                                newline_prob=0.3)
+        datas.append(d)
+    # one record wider than capacity, landing a few partitions in
+    bad = datas[1][:50] + b'9,"' + b"y" * 3000 + b'",1.5,2020-01-01\n'
+    sources = [datas[0], bad, datas[1], datas[2]]
+
+    sess = StreamSession(Parser(cfg), partition_bytes=96, max_carry_bytes=512,
+                         n_streams=4)
+    batched = {s: [] for s in range(4)}
+    faults = []
+    for s, result, n in sess.parse_streams([[d] for d in sources]):
+        if isinstance(result, StreamOverflow):
+            faults.append((s, result))
+        else:
+            batched[s].append((result, n))
+    assert faults and [s for s, _ in faults] == [1]
+    assert faults[0][1].stream == 1
+    # partitions before the overflow round still came through normally;
+    # nothing for stream 1 arrives after the fault (lane retired)
+    n_before_fault = len(batched[1])
+
+    for s in (0, 2, 3):
+        sp = StreamingParser(Parser(cfg), 96, max_carry_bytes=512)
+        solo = list(sp.parse_stream([sources[s]]))
+        assert len(solo) == len(batched[s]), s
+        for i, ((rq, nq), (rb, nb)) in enumerate(zip(solo, batched[s])):
+            assert nq == nb, (s, i)
+            _assert_results_equal(rq, rb, label=f"{backend}/isol{s}/part{i}: ")
+        _assert_stats_equal(sp.stats, sess.stats[s], label=f"{backend}/isol{s}: ")
+    st1 = sess.stats[1]
+    assert st1.failed
+    assert st1.partitions == n_before_fault  # pre-fault rounds counted ...
+    assert 0 < st1.bytes_in <= len(bad)      # ... and the overflowing round's
+    assert st1.bytes_in > st1.partitions * 96  # bytes too (work was dispatched)
+
+    # lane reclaim: the session is idle again and every lane — including
+    # the failed one — parses a fresh batch normally.
+    again = {s: 0 for s in range(4)}
+    for s, result, n in sess.parse_streams([[datas[2]]] * 4):
+        assert not isinstance(result, StreamOverflow), s
+        again[s] += n
+    assert all(v == 4 for v in again.values()), again
+    assert sess.call_stats[1].records == 4 and not sess.call_stats[1].failed
+
+
+def test_session_reentry_guard_and_reset():
+    """A parse_streams generator abandoned mid-stream (caller break) leaves
+    the session 'dirty': re-entry is a clear error, reset() restores it,
+    and a concurrent second generator on an active session is refused."""
+    data = b"1,aa\n2,bb\n3,cc\n4,dd\n" * 4
+    sess = StreamSession(_small_parser(), partition_bytes=8, max_carry_bytes=64)
+    gen = sess.parse_streams([[data]])
+    next(gen)                     # at least one round dispatched
+    # a second generator while the first is open must be refused
+    with pytest.raises(RuntimeError, match="active"):
+        next(sess.parse_streams([[data]]))
+    gen.close()                   # abnormal exit: dispatched round pending
+    with pytest.raises(RuntimeError, match="dirty"):
+        next(sess.parse_streams([[data]]))
+    sess.reset()
+    out = [n for _s, _r, n in sess.parse_streams([[data]])]
+    assert sum(out) == 16         # full clean run after reset
+
+    # an exception inside the consumer loop behaves like break
+    gen = sess.parse_streams([[data]])
+    try:
+        for _ in gen:
+            raise KeyboardInterrupt
+    except KeyboardInterrupt:
+        pass
+    gen.close()
+    with pytest.raises(RuntimeError, match="dirty"):
+        next(sess.parse_streams([[data]]))
+    sess.reset()
+    assert sum(n for _s, _r, n in sess.parse_streams([[data]])) == 16
+
+
+def test_streaming_parser_break_then_reuse():
+    """The legacy single-stream wrapper stays permissive: breaking out of
+    parse_stream and starting a new one must work (it resets the session
+    under the hood)."""
+    data = b"1,aa\n2,bb\n3,cc\n4,dd\n"
+    sp = StreamingParser(_small_parser(), partition_bytes=6, max_carry_bytes=64)
+    for _ in sp.parse_stream([data]):
+        break
+    total = sum(n for _r, n in sp.parse_stream([data]))
+    assert total == 4
+
+
+@pytest.mark.parametrize("engine", ["device", "host"])
+def test_flush_delim_accounting(engine):
+    """The synthetic flush delimiter is parsed but is not a source byte:
+    it lands in stats.flush_delims, never in bytes_in, so device-parsed
+    bytes are exactly bytes_in + bytes_reparsed + flush_delims."""
+    unterminated = b"1,aa\n2,bb\n3,cc"      # flush appends one delimiter
+    terminated = b"1,aa\n2,bb\n3,cc\n"      # ends on a delimiter: none needed
+    for data, want in ((unterminated, 1), (terminated, 0)):
+        sp = StreamingParser(_small_parser(), 6, max_carry_bytes=64,
+                             engine=engine)
+        list(sp.parse_stream([data]))
+        assert sp.stats.records == 3, engine
+        assert sp.stats.bytes_in == len(data), engine
+        assert sp.stats.flush_delims == want, (engine, data)
+    # PAD-only tail: no payload to terminate, no delimiter appended
+    sp = StreamingParser(_small_parser(), 256, max_carry_bytes=64, engine=engine)
+    list(sp.parse_stream([b"1,aa\n" + b"\x00" * 8]))
+    assert sp.stats.flush_delims == 0
+    # quoted newline at the very end: the record is unterminated (mid-
+    # quote) but both engines judge on the raw byte VALUE, which equals
+    # the delimiter — no append, and the engines agree (the malformed
+    # tail is flagged by validation, not closed by a delimiter)
+    sp = StreamingParser(_small_parser(), 256, max_carry_bytes=64, engine=engine)
+    list(sp.parse_stream([b'1,aa\n2,"bb\n']))
+    assert sp.stats.flush_delims == 0
+
+
+def test_flush_delim_accounting_batched(rng):
+    """flush_delims matches the solo runs stream-by-stream in a batched
+    session (the host mirror predicts the device's judgement per lane)."""
+    _, d0 = random_csv_table(rng, 8, ("int32", "str"))
+    sources = [d0, d0.rstrip(b"\n"), b""]
+    sess = StreamSession(_small_parser(), partition_bytes=16,
+                         max_carry_bytes=128, n_streams=3)
+    for _ in sess.parse_streams([[d] for d in sources]):
+        pass
+    for s, d in enumerate(sources):
+        sp = StreamingParser(_small_parser(), 16, max_carry_bytes=128)
+        list(sp.parse_stream([d]))
+        _assert_stats_equal(sp.stats, sess.stats[s], label=f"delim/{s}: ")
+    assert sess.stats[0].flush_delims == 0
+    assert sess.stats[1].flush_delims == 1
 
 
 def test_stream_session_no_per_partition_host_sync(monkeypatch):
