@@ -14,6 +14,13 @@
             CPU container the Pallas kernels run in interpret mode — the
             numbers are correctness-under-load datapoints and relative
             fused-vs-unfused comparisons, not the TPU projection.
+  * distributed_sweep — mesh-sharded end-to-end parsing
+            (``DistributedParser``): GB/s over D ∈ {1, 2, 4, 8} virtual
+            devices (one subprocess per D) on yelp + taxi, per-variant
+            collective byte counts off the compiled executable (must be
+            O(D·|S|), input-size-independent) and the
+            ``sharded_vs_single`` bit-identity pin (``assemble`` vs
+            ``Parser.to_arrow``).
   * stream_sweep — the §4.4 device-resident streaming engine
             (``StreamSession``): end-to-end GB/s for S ∈ {1, 4, 16}
             concurrent streams, batched (one vmapped dispatch per round)
@@ -105,6 +112,35 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
             "S<K>": {
               "speedup": float,           # staged s_total / fused s_total
               "no_slower": bool
+            }
+          }
+        },
+        "distributed": {                  # mesh-sharded end-to-end workload
+          "n_records_base": int,          # CLI --records (pallas variants run
+                                          #   smaller, like the other sweeps)
+          "per_device": {
+            "D<K>": {                     # K virtual devices (subprocess with
+                                          #   --xla_force_host_platform_
+                                          #   device_count=K; "skipped" when
+                                          #   the topology is unavailable)
+              "devices": int,
+              "workloads": {
+                "<yelp|taxi>": {
+                  "variants": {
+                    "<reference|pallas|pallas-fused>": {
+                      "n_records": int,
+                      "bytes": int,       # raw input size
+                      "us_per_call": float,  # best-of sharded e2e parse
+                      "gbps": float,
+                      "collective_bytes": {str: int},   # per-op bytes moved
+                                          #   by the compiled executable —
+                                          #   O(D*|S|), input-size-free
+                      "collective_counts": {str: int},  # per-op instr counts
+                      "sharded_vs_single": bool  # assemble() bit-identical
+                    }                            #   to Parser.to_arrow
+                  }
+                }
+              }
             }
           }
         },
@@ -602,6 +638,132 @@ def serve_sweep(n_records=250, backends=("reference", "pallas"),
     return entry
 
 
+#: Distributed-workload device counts (virtual XLA host devices, one
+#: subprocess per count so the topology override never leaks).
+DIST_DEVICES = (1, 2, 4, 8)
+
+
+def _dist_variants(backends):
+    """reference + pallas staged + pallas megakernel, per the CLI filter."""
+    out = []
+    if "reference" in backends:
+        out.append("reference")
+    if "pallas" in backends:
+        out += ["pallas", "pallas-fused"]
+    return out
+
+
+def distributed_child(n_records, backends):
+    """Runs INSIDE the per-D subprocess (``--_distributed-child``): the
+    mesh-sharded end-to-end sweep on this process's device fleet, emitting
+    one JSON object on stdout for the parent to aggregate."""
+    from jax.sharding import Mesh
+    from repro.core.distributed import DistributedParser
+    from repro.launch.dryrun import parse_collective_bytes
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    out = {"devices": len(jax.devices()), "workloads": {}}
+    for kind, mk in (("yelp", yelp_parser), ("taxi", taxi_parser)):
+        wl = {"variants": {}}
+        for variant in _dist_variants(backends):
+            kw = (dict(backend="pallas", fuse_pipeline=True)
+                  if variant == "pallas-fused" else dict(backend=variant))
+            n = (n_records if variant == "reference"
+                 else max(n_records // 4, 16))
+            if kind == "taxi":
+                n *= 4
+            data = dataset(kind, n)
+            p = mk(max_records=1 << 12, **kw)
+            dp = DistributedParser(p.cfg, mesh)
+            chunks = dp.prepare(data)
+            for _ in range(2):  # compile + warm
+                jax.block_until_ready(dp.parse_chunks(chunks))
+            best, sh = float("inf"), None
+            for _ in range(3):
+                t0 = time.perf_counter()
+                sh = dp.parse_chunks(chunks)
+                jax.block_until_ready(sh)
+                best = min(best, time.perf_counter() - t0)
+            # collective accounting on the compiled sharded executable —
+            # the cross-device traffic must be summary-sized (O(D*|S|))
+            totals, counts = parse_collective_bytes(
+                dp.lower(*chunks.shape).compile().as_text())
+            # sharded_vs_single bit-identity pin: host-assembled Arrow
+            # table vs the single-device Parser export, byte for byte
+            ref = p.to_arrow(p.parse_chunks(jnp.asarray(p.prepare(data))))
+            got = dp.assemble(sh)
+            match = (got.keys() == ref.keys()) and all(
+                got[c].keys() == ref[c].keys()
+                and all(np.array_equal(np.asarray(got[c][k]),
+                                       np.asarray(ref[c][k]))
+                        for k in got[c])
+                for c in got)
+            wl["variants"][variant] = {
+                "n_records": n,
+                "bytes": len(data),
+                "us_per_call": best * 1e6,
+                "gbps": gbps(len(data), best),
+                "collective_bytes": totals,
+                "collective_counts": counts,
+                "sharded_vs_single": bool(match),
+            }
+        out["workloads"][kind] = wl
+    print(json.dumps(out))
+
+
+def distributed_sweep(n_records=250, backends=("reference", "pallas"),
+                      devices=DIST_DEVICES):
+    """Mesh-sharded end-to-end workload: GB/s over D ∈ {1, 2, 4, 8} virtual
+    devices on yelp + taxi, one subprocess per D (the host-platform device
+    override must be set before jax initialises, so it can never run in
+    this process).  Per variant the child also records the compiled
+    executable's collective byte/instruction counts (the O(D·|S|)
+    accountability metric) and the ``sharded_vs_single`` bit-identity pin
+    (``DistributedParser.assemble`` vs ``Parser.to_arrow``).  On this
+    interpret-mode container the GB/s rows are correctness-under-load
+    datapoints; the collective counts and the bit-identity pin are the
+    real per-PR signal."""
+    import os
+    import subprocess
+    import sys
+
+    backend_arg = ("all" if set(backends) >= {"reference", "pallas"}
+                   else backends[0])
+    entry = {"n_records_base": n_records, "per_device": {}}
+    for d in devices:
+        env = dict(os.environ)
+        kept = [f for f in env.get("XLA_FLAGS", "").split()
+                if not f.startswith("--xla_force_host_platform_device_count=")]
+        env["XLA_FLAGS"] = " ".join(
+            kept + [f"--xla_force_host_platform_device_count={d}"])
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (env.get("PYTHONPATH"), "src") if p)
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_parser",
+             "--_distributed-child", str(d), "--records", str(n_records),
+             "--backend", backend_arg, "--json", ""],
+            capture_output=True, text=True, timeout=1800, env=env)
+        if proc.returncode:
+            raise RuntimeError(
+                f"distributed child D={d} failed:\n{proc.stderr[-4000:]}")
+        child = json.loads(proc.stdout.splitlines()[-1])
+        if child.get("devices") != d:
+            # topology unavailable on this platform: record an explicit
+            # skip instead of silently benchmarking the wrong mesh
+            entry["per_device"][f"D{d}"] = "skipped"
+            emit(f"distributed/D{d}", 0.0, "skipped")
+            continue
+        entry["per_device"][f"D{d}"] = child
+        for kind, wl in child["workloads"].items():
+            for variant, v in wl["variants"].items():
+                emit(f"distributed/D{d}/{kind}/{variant}",
+                     v["us_per_call"],
+                     f"{v['gbps']:.3f}GB/s;collective_bytes="
+                     f"{sum(v['collective_bytes'].values())};match="
+                     f"{v['sharded_vs_single']}")
+    return entry
+
+
 def fig12_partition_size():
     data = dataset("yelp", N_YELP * 2)
     for part_kib in (64, 256, 1024):
@@ -703,7 +865,8 @@ def main(argv=None):
     ap.add_argument("--backend", default="all",
                     choices=["all", "reference", "pallas"])
     ap.add_argument("--workload", default="all",
-                    choices=["all", "yelp", "taxi", "stream", "serve"])
+                    choices=["all", "yelp", "taxi", "stream", "serve",
+                             "distributed"])
     ap.add_argument("--json", default="BENCH_parser.json", metavar="PATH",
                     help="machine-readable sweep output ('' to skip)")
     ap.add_argument("--records", type=int, default=250,
@@ -711,11 +874,17 @@ def main(argv=None):
                          "workload runs this many records per stream)")
     ap.add_argument("--figs", action="store_true",
                     help="also run the paper-figure suites (9-13)")
+    ap.add_argument("--_distributed-child", type=int, default=None,
+                    dest="distributed_child", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
     backends = ("reference", "pallas") if args.backend == "all" else (args.backend,)
-    workloads = (("yelp", "taxi", "stream", "serve") if args.workload == "all"
-                 else (args.workload,))
+    if args.distributed_child is not None:
+        # subprocess mode: the per-D mesh sweep body (see distributed_sweep)
+        distributed_child(args.records, backends)
+        return
+    workloads = (("yelp", "taxi", "stream", "serve", "distributed")
+                 if args.workload == "all" else (args.workload,))
     print("name,us_per_call,derived")
     mat = tuple(w for w in workloads if w in ("yelp", "taxi"))
     if mat:
@@ -728,6 +897,9 @@ def main(argv=None):
             n_records=args.records, backends=backends)
     if "serve" in workloads:
         report["workloads"]["serve"] = serve_sweep(
+            n_records=args.records, backends=backends)
+    if "distributed" in workloads:
+        report["workloads"]["distributed"] = distributed_sweep(
             n_records=args.records, backends=backends)
     if args.json:
         with open(args.json, "w") as f:

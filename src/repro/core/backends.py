@@ -204,8 +204,14 @@ class ParseBackend:
     extract_carry: Callable = extract_carry_jnp
     # Whole-pipeline fused executor (see module docstring).  Signature:
     #   execute(raw_chunks (C,K) u8, plan: stages.ParsePlan, cfg,
-    #           initial_state () i32) -> stages.ParseResult
-    # None = backend has no fused path; plans resolve to "staged".
+    #           initial_state () i32,
+    #           stitch: Optional[stages.ParseStitch] = None)
+    #       -> stages.ParseResult
+    # ``stitch`` carries the distributed driver's cross-shard hooks (prefix
+    # composition, offset/record-base seeding, global validation reductions)
+    # so the fused path runs per-shard under shard_map — see
+    # ``stages.ParseStitch``.  None = backend has no fused path; plans
+    # resolve to "staged".
     execute: Optional[Callable] = None
     # Static byte cap for the fused path: partitions larger than this run
     # the staged tier instead (checked at trace time in execute_plan — the
@@ -405,7 +411,7 @@ def _pl_parse_date(css, offset, length, cfg) -> typeconv_mod.Parsed:
         css, offset, length, interpret=cfg.interpret, **_window_kw(cfg))
 
 
-def _pl_execute(raw_chunks, plan, cfg, initial_state):
+def _pl_execute(raw_chunks, plan, cfg, initial_state, stitch=None):
     """Whole-pipeline fused executor: §3.1 scan + ONE megakernel per
     partition (``kernels/fused_pipeline``), then O(max_records)/scalar
     assembly — no ``(N,)``/``(R,)`` intermediate ever leaves a kernel.
@@ -417,6 +423,18 @@ def _pl_execute(raw_chunks, plan, cfg, initial_state):
     replicates the §4.3 validation arithmetic on the kernel's
     ``fields_per_rec``/scalar outputs exactly as ``validation.validate``
     computes it from the flat class stream.
+
+    Under a ``stitch`` (distributed execution; ``stages.ParseStitch``) the
+    composite scan is seeded with the cross-device prefix, the megakernel's
+    in-kernel tagging is seeded with the shard's column offset, and
+    validation goes through the stitch's global reductions.  The column
+    seed comes from the §3.2 summaries, which the megakernel only produces
+    *internally* — so the stitched fused path runs the staged summary
+    kernel (``replay_summaries``) first for the stitch and the megakernel
+    re-replays in VMEM.  That duplicate replay is the price of keeping the
+    megakernel single-launch; the shard driver's own summary pass CSEs
+    against it, so it is one extra replay total, still O(N/D) per device
+    with O(D·|S|) collectives.
     """
     from repro.core import stages as stages_mod
     from repro.core import validation as validation_mod
@@ -427,15 +445,43 @@ def _pl_execute(raw_chunks, plan, cfg, initial_state):
     # composite scan — the only stages outside the megakernel.
     vecs = _pl_chunk_vectors(raw_chunks, cfg)
     scanned = tr.exclusive_scan_vectors(vecs, use_matmul=cfg.use_matmul_scan)
+    if stitch is not None:
+        prefix = stitch.prefix_fn(vecs)
+        scanned = tr.compose(jnp.broadcast_to(prefix, scanned.shape), scanned)
     start = tr.start_states(scanned, cfg.dfa, initial_state=initial_state)
+
+    col_seed = None
+    if stitch is not None:
+        _, _, _, summaries = _pl_replay_summaries(raw_chunks, start, cfg)
+        _, _, col_seed, n_total = stitch.offsets_fn(summaries)
 
     out = fused_ops.fused_parse(
         raw_chunks, start, cfg.dfa,
         tagging=mat.tagging, n_cols=mat.n_cols, max_records=mat.max_records,
         selected=mat.selected, convert=mat.convert,
         int_width=cfg.int_width, float_width=cfg.float_width,
-        interpret=cfg.interpret,
+        col_seed=col_seed, interpret=cfg.interpret,
     )
+
+    if stitch is not None:
+        # §4.3 goes through the stitch's global reductions; the kernel's
+        # fields_per_rec is already seed-corrected at the head record.
+        val = stitch.validation_fn(
+            out.fields_per_rec, out.n_records, out.end_state,
+            out.saw_invalid, n_total,
+        )
+        return stages_mod.ParseResult(
+            css=out.css,
+            col_start=out.col_start,
+            col_count=out.col_count,
+            field_offset=out.offset,
+            field_length=out.length,
+            field_present=out.present,
+            values=out.values,
+            validation=val,
+            end_state=out.end_state.astype(jnp.int32),
+            last_record_end=out.last_record_end.astype(jnp.int32),
+        )
 
     # §4.3 validation from the kernel's per-record field counts + scalars —
     # the same arithmetic validation.validate runs on the flat class stream.
@@ -464,6 +510,7 @@ def _pl_execute(raw_chunks, plan, cfg, initial_state):
         col_count=out.col_count,
         field_offset=out.offset,
         field_length=out.length,
+        field_present=out.present,
         values=out.values,
         validation=val,
         end_state=out.end_state.astype(jnp.int32),

@@ -119,9 +119,18 @@ def field_index_terminated(
     )[:-1].reshape(n_cols, max_records)
     present = end < _BIG
 
-    start = jnp.concatenate(
-        [col_start[:n_cols, None], end[:, :-1] + 1], axis=1
+    # Start = one past the previous *present* field's terminator (absent
+    # fields — a record whose field terminated on an earlier shard, or a
+    # ragged record's missing column — contribute no bytes), or the
+    # column's CSS start when no field precedes.  Ends are monotone within
+    # a column (stable partition), so an exclusive running max finds the
+    # predecessor; with every field present this reduces to the plain
+    # ``end[r-1] + 1`` recurrence bit-for-bit.
+    prev_end = jax.lax.cummax(jnp.where(present, end, -1), axis=1)
+    prev_end = jnp.concatenate(
+        [jnp.full((n_cols, 1), -1, end.dtype), prev_end[:, :-1]], axis=1
     )
+    start = jnp.where(prev_end >= 0, prev_end + 1, col_start[:n_cols, None])
     length = jnp.where(present, end - start, 0)
     offset = jnp.where(present, start, 0)
     return FieldIndex(

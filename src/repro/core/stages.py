@@ -44,15 +44,18 @@ offsets make windows contiguous; ``cfg.window_rows`` /
 ``cfg.max_window_bytes``), so VMEM never holds the whole CSS and per-parse
 input size is unbounded by VMEM capacity; see ``docs/ARCHITECTURE.md``.
 
-Driver-specific glue stays in the drivers: the cross-device prefix scans of
-``DistributedParser`` plug in via ``prefix_fn`` / ``chunk_offsets`` without
-this module knowing about meshes, and the distributed driver plans with
-``convert=False`` because its shards export unconverted (each host converts
-its own batch).
+Driver-specific glue stays in the drivers: the cross-device scans of
+``DistributedParser`` plug in via a :class:`ParseStitch` — three hooks
+(transition-composite prefix, stitched chunk offsets + shard seeds, and a
+cross-shard validation reduction) that let every shard of a mesh run this
+*same* ``execute_plan`` composition end to end (conversion included) while
+this module stays mesh-agnostic.  ``plan_parse(convert=False)`` remains
+available for index-only shard export (each host converts its own batch —
+the pre-mesh-native contract, still used by the dry-run roofline cells).
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -174,6 +177,11 @@ class ParseResult(NamedTuple):
     col_count: jax.Array                 # (n_cols+1,) int32
     field_offset: jax.Array              # (n_cols, max_records) int32
     field_length: jax.Array              # (n_cols, max_records) int32
+    field_present: jax.Array             # (n_cols, max_records) bool — field
+                                         # materialised in input (disambiguates
+                                         # empty-but-terminated from absent;
+                                         # the distributed host assembly keys
+                                         # boundary-piece recovery on it)
     values: Dict[str, typeconv_mod.Parsed]
     validation: validation_mod.Validation
     end_state: jax.Array                 # () int32 — carried into next partition
@@ -204,6 +212,43 @@ class ParsePlan(NamedTuple):
     expected_columns: Optional[int]   # None = skip the §4.3 column-count check
     execute_path: str = "staged"      # staged | fused
     path_reason: str = "fuse_pipeline not requested"
+
+
+class ParseStitch(NamedTuple):
+    """Cross-shard stitching hooks for running :func:`execute_plan` under
+    ``shard_map`` (the distributed driver's glue, paper Fig. 4 at mesh
+    granularity).
+
+    Each hook exchanges only O(devices · |S|) summary data — never anything
+    input-sized — which is the whole scale-out argument: per-shard work is
+    N/D bytes, the stitching collectives are constant.
+
+    ``prefix_fn(vecs (C,S)) -> (S,)``
+        Exclusive cross-device composite of the §3.1 transition summaries,
+        applied before the local exclusive scan (one all-gather of one
+        ``(S,)`` vector per device).
+    ``offsets_fn(summaries) -> (ChunkOffsets, rec_base (), col_seed (), n_total ())``
+        Globally stitched §3.2 chunk offsets plus the shard seeds: the
+        first global record id in the shard, the column offset entering the
+        shard (field delimiters since the last record delimiter before it),
+        and the global record count (one all-gather of one summary triple
+        per device).
+    ``validation_fn(fields_per_rec (M,), n_local (), end_state (), saw_invalid (), n_total ()) -> Validation``
+        Cross-shard §4.3 reduction: ``fields_per_rec`` is the shard's
+        *seed-corrected* per-record column counts on shard-local ids (the
+        boundary record's count already includes ``col_seed``), and the hook
+        reduces the global flags (accepting end state on the last shard,
+        min/max columns, conformance) across the mesh axis — O(devices)
+        scalars.  ``record_ok`` in the returned Validation stays per-shard.
+
+    With a stitch in place the executor materializes with *shard-local*
+    record ids (``record_id - rec_base``) so the field index stays small;
+    ``rec_base`` restores global ids.
+    """
+
+    prefix_fn: Callable
+    offsets_fn: Callable
+    validation_fn: Callable
 
 
 def plan_parse(cfg, backend: ParseBackend, *, convert: bool = True) -> ParsePlan:
@@ -297,14 +342,17 @@ def execute_plan(
     cfg,
     backend: ParseBackend,
     initial_state: Optional[jax.Array] = None,
+    stitch: Optional[ParseStitch] = None,
 ) -> ParseResult:
     """Run one partition through the full §3.1→§4.4 pipeline per ``plan``.
 
     The single traced composition point every driver executes:
     ``Parser.parse_chunks`` jits exactly this; the streaming engine wraps it
     in its donated carry step (prepend → ``execute_plan`` → extract) and
-    ``vmap``s that over a stream axis.  ``initial_state`` overrides the DFA
-    start state (the mid-record partition-boundary hook).
+    ``vmap``s that over a stream axis; the distributed driver runs it on
+    every shard under ``shard_map`` with a :class:`ParseStitch` supplying
+    the cross-device prefixes/seeds/reductions.  ``initial_state`` overrides
+    the DFA start state (the mid-record partition-boundary hook).
     """
     if initial_state is None:
         initial_state = jnp.int32(cfg.dfa.start_state)
@@ -316,29 +364,53 @@ def execute_plan(
     # the staged composition below is the statically bounded fallback tier
     # — same design as the windowed numparse cap, one level up.
     if plan.execute_path == "fused" and raw_chunks.size <= backend.fused_max_bytes:
-        return backend.execute(raw_chunks, plan, cfg, initial_state)
+        return backend.execute(raw_chunks, plan, cfg, initial_state,
+                               stitch=stitch)
 
-    # §3.1/§3.2 — parsing context + fused per-chunk offset summaries.
-    ctx = determine_contexts(raw_chunks, cfg, backend, initial_state=initial_state)
+    # §3.1/§3.2 — parsing context + fused per-chunk offset summaries (the
+    # stitch plugs the cross-device composite prefix into the scan).
+    ctx = determine_contexts(
+        raw_chunks, cfg, backend, initial_state=initial_state,
+        prefix_fn=None if stitch is None else stitch.prefix_fn,
+    )
     end_state = ctx.end_states[-1]
 
-    # §3.2 — record/column identification from the summaries.
-    ids = identify_symbols(ctx)
+    # §3.2 — record/column identification from the summaries.  Under a
+    # stitch the chunk offsets are globally seeded and materialization runs
+    # on shard-local record ids (rec_base restores global ids).
+    if stitch is None:
+        ids = identify_symbols(ctx)
+        rec_for_index = ids.record_id
+    else:
+        offs, rec_base, col_seed, n_total = stitch.offsets_fn(ctx.summaries)
+        ids = identify_symbols(ctx, chunk_offsets=offs)
+        rec_for_index = ids.record_id - rec_base
 
     # §3.2/§3.3 — backend-owned materialization: tagging, stable partition,
     # field index, type conversion (one shared stage, one static plan).
     cols, values = materialize(
-        raw_chunks, ctx.classes, ids.record_id, ids.column_id,
+        raw_chunks, ctx.classes, rec_for_index, ids.column_id,
         plan.materialize, cfg, backend,
     )
 
-    # §4.3 — validation.
+    # §4.3 — validation (stitched: local per-record column counts, with the
+    # boundary record's count completed by the cross-device column seed,
+    # reduced globally by the stitch hook).
     flat_classes = ctx.classes.reshape(-1)
-    val = validation_mod.validate(
-        flat_classes, ids.record_id, end_state, ctx.saw_invalid, cfg.dfa,
-        plan.materialize.max_records,
-        expected_columns=plan.expected_columns,
-    )
+    if stitch is None:
+        val = validation_mod.validate(
+            flat_classes, rec_for_index, end_state, ctx.saw_invalid, cfg.dfa,
+            plan.materialize.max_records,
+            expected_columns=plan.expected_columns,
+        )
+    else:
+        fpr = validation_mod.fields_per_record(
+            flat_classes, rec_for_index, plan.materialize.max_records
+        ).at[0].add(col_seed)
+        n_local = jnp.sum(flat_classes == RECORD_DELIM).astype(jnp.int32)
+        val = stitch.validation_fn(
+            fpr, n_local, end_state, jnp.any(ctx.saw_invalid), n_total
+        )
 
     return ParseResult(
         css=cols.css,
@@ -346,6 +418,7 @@ def execute_plan(
         col_count=cols.col_count,
         field_offset=cols.findex.offset,
         field_length=cols.findex.length,
+        field_present=cols.findex.present,
         values=values,
         validation=val,
         end_state=end_state.astype(jnp.int32),

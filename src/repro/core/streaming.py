@@ -30,6 +30,13 @@ flush flags — so S independent sources (concurrent tenants) parse in one
 dispatch per round, bit-identical to S sequential single-stream sessions
 (pinned by ``tests/test_streaming.py``).
 
+**Lane sharding**: with ``mesh=`` the stream axis is additionally sharded
+over a mesh axis (``shard_map`` around the vmapped step): each device owns
+``S/D`` lanes, their carry buffers stay device-resident round over round
+(no carry leaf ever crosses devices, no collectives in the step), and one
+dispatch still drives the whole fleet — bit-identical to the single-device
+batched engine (pinned by ``tests/test_distributed.py``).
+
 :class:`StreamingParser` is the legacy iterator API, now a thin wrapper
 over a single-stream session (``engine="device"``); ``engine="host"``
 keeps the original host-carry loop — one blocking sync per partition —
@@ -48,6 +55,9 @@ from typing import Iterable, Iterator, List, NamedTuple, Optional, Sequence, Tup
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.experimental.shard_map import shard_map
 
 from repro.core import stages as stages_mod
 from repro.core.dfa import PAD_BYTE
@@ -201,6 +211,14 @@ class StreamSession:
         any stream may contain — the paper's carry-over allocation).
       n_streams: number of independent sources batched per dispatch
         (leading ``vmap`` axis of the step; per-stream carry state).
+      mesh: optional device mesh — lanes are sharded over ``mesh_axis``
+        (``n_streams`` must divide by its size), each device owning a
+        disjoint lane set whose carry buffers stay resident on that
+        device across rounds (the carry never crosses devices; the step
+        compiles with zero collectives).  One dispatch per round drives
+        every device; results are bit-identical to the same session
+        without a mesh.
+      mesh_axis: the mesh axis name lanes shard over.
 
     ``stats`` is one :class:`StreamStats` per stream, accumulated across
     ``parse_streams`` calls (carry state resets per call); ``call_stats``
@@ -217,7 +235,8 @@ class StreamSession:
     """
 
     def __init__(self, parser: Parser, partition_bytes: int,
-                 max_carry_bytes: Optional[int] = None, n_streams: int = 1):
+                 max_carry_bytes: Optional[int] = None, n_streams: int = 1,
+                 mesh: Optional[Mesh] = None, mesh_axis: str = "streams"):
         self.parser = parser
         self.partition_bytes = int(partition_bytes)
         self.max_carry_bytes = int(max_carry_bytes or partition_bytes)
@@ -230,6 +249,31 @@ class StreamSession:
         self.n_streams = int(n_streams)
         if self.n_streams < 1:
             raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+        # Lane sharding (mesh mode): the stream axis is sharded over a mesh
+        # axis — each device owns a disjoint lane set and its lanes' carry
+        # buffers live on that device for the whole session (the step's
+        # in/out specs keep every leaf P(axis), so no carry leaf ever
+        # crosses devices and the step body compiles with ZERO collectives —
+        # pinned by tests/test_distributed.py).  Bit-identical to the
+        # single-device batched engine: the step body is the same vmapped
+        # function, merely partitioned along the lane axis.
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        if mesh is not None:
+            if mesh_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no axis {mesh_axis!r}: {mesh.axis_names}")
+            d = mesh.shape[mesh_axis]
+            if self.n_streams % d:
+                raise ValueError(
+                    f"n_streams={self.n_streams} not divisible by mesh axis "
+                    f"{mesh_axis!r} size {d}")
+        #: Mesh mode always uses batched (leading-stream-axis) shapes, even
+        #: for S == 1, so the shard_map specs are uniform.
+        self._batched = self.n_streams > 1 or mesh is not None
+        self._lane_sharding = (
+            None if mesh is None
+            else NamedSharding(mesh, PartitionSpec(mesh_axis)))
         # Double-buffered staging: round r+1 is assembled in one buffer
         # while the other may still back round r's in-flight transfer.
         # Stale bytes beyond a take need no re-padding — prepend_carry masks
@@ -282,7 +326,15 @@ class StreamSession:
             )
             return result, new_buf, new_len, aux
 
-        fn = step_one if self.n_streams == 1 else jax.vmap(step_one)
+        fn = step_one if not self._batched else jax.vmap(step_one)
+        if self.mesh is not None:
+            # Lane sharding: every in/out leaf is partitioned on its leading
+            # stream axis; each device runs the SAME vmapped step over its
+            # own S/D lanes.  check_rep=False: nothing is replicated.
+            spec = PartitionSpec(self.mesh_axis)
+            fn = shard_map(fn, mesh=self.mesh,
+                           in_specs=(spec, spec, spec, spec, spec),
+                           out_specs=spec, check_rep=False)
         # Donate the carry buffers: partition i+1's step overwrites partition
         # i's carry in place (no device-side copy growth).  CPU/interpret
         # hosts can't alias donations — skip there to keep runs warning-free.
@@ -291,10 +343,16 @@ class StreamSession:
 
     def _init_carry(self):
         S = self.n_streams
-        shape = (self.capacity,) if S == 1 else (S, self.capacity)
-        lshape = () if S == 1 else (S,)
-        return (jnp.full(shape, PAD_BYTE, jnp.uint8),
-                jnp.zeros(lshape, jnp.int32))
+        shape = (S, self.capacity) if self._batched else (self.capacity,)
+        lshape = (S,) if self._batched else ()
+        buf = jnp.full(shape, PAD_BYTE, jnp.uint8)
+        ln = jnp.zeros(lshape, jnp.int32)
+        if self._lane_sharding is not None:
+            # Carry locality: buffers start on their owning device and the
+            # step's out_specs keep them there — the carry never crosses.
+            buf = jax.device_put(buf, self._lane_sharding)
+            ln = jax.device_put(ln, self._lane_sharding)
+        return buf, ln
 
     # -- host-side staging ---------------------------------------------------
     def _stage_round(self, feeds: List[_Feed]):
@@ -333,7 +391,9 @@ class StreamSession:
                 )
         if not any(active):
             return None
-        fresh = jax.device_put(staging if S > 1 else staging[0])
+        host = staging if self._batched else staging[0]
+        fresh = (jax.device_put(host, self._lane_sharding)
+                 if self._lane_sharding is not None else jax.device_put(host))
         return fresh, fresh_len, flush, active, delims
 
     # -- the dispatch-ahead loop ---------------------------------------------
@@ -389,8 +449,8 @@ class StreamSession:
                 self._inflight = None
                 result, carry_buf, carry_len, aux = self._step(
                     carry_buf, carry_len, fresh,
-                    jnp.asarray(fresh_len if S > 1 else fresh_len[0]),
-                    jnp.asarray(flush if S > 1 else flush[0]),
+                    jnp.asarray(fresh_len if self._batched else fresh_len[0]),
+                    jnp.asarray(flush if self._batched else flush[0]),
                 )
                 self._inflight = (result, carry_buf, carry_len, aux)
                 if pending is not None:
@@ -488,7 +548,7 @@ class StreamSession:
             yield s, self._slice_result(result, s), int(n_records[s])
 
     def _slice_result(self, result: ParseResult, s: int) -> ParseResult:
-        if self.n_streams == 1:
+        if not self._batched:
             return result
         return jax.tree_util.tree_map(lambda x: x[s], result)
 

@@ -26,6 +26,26 @@ class Validation(NamedTuple):
     record_ok: jax.Array     # (max_records,) bool — per-record conformance
 
 
+def fields_per_record(
+    classes: jax.Array, record_id: jax.Array, max_records: int
+) -> jax.Array:
+    """Per-record column counts ``(max_records,) int32`` — one more than the
+    field delimiters attributed to each record.  Records at or beyond
+    ``max_records`` are clipped into a dropped overflow segment.
+
+    Shared between :func:`validate` (single device) and the distributed
+    driver, whose shards compute *local* counts on shard-local record ids
+    and stitch the boundary record's count with the cross-device column
+    seed before reducing (``core/distributed.py``).
+    """
+    classes = classes.reshape(-1)
+    is_fld = classes == FIELD_DELIM
+    rid = jnp.where(record_id < max_records, record_id, max_records)
+    return jax.ops.segment_sum(
+        is_fld.astype(jnp.int32), rid, num_segments=max_records + 1
+    )[:-1] + 1
+
+
 def validate(
     classes: jax.Array,
     record_id: jax.Array,
@@ -48,13 +68,9 @@ def validate(
     no_inv = ~jnp.any(saw_invalid)
 
     is_rec = classes == RECORD_DELIM
-    is_fld = classes == FIELD_DELIM
     n_records = jnp.sum(is_rec).astype(jnp.int32)
 
-    rid = jnp.where(record_id < max_records, record_id, max_records)
-    fields_per_rec = jax.ops.segment_sum(
-        is_fld.astype(jnp.int32), rid, num_segments=max_records + 1
-    )[:-1] + 1
+    fields_per_rec = fields_per_record(classes, record_id, max_records)
     rec_live = jnp.arange(max_records) < n_records
     big = jnp.int32(2**31 - 1)
     minc = jnp.min(jnp.where(rec_live, fields_per_rec, big))

@@ -93,11 +93,13 @@ def _make_pipeline_kernel(
     PAD = NB * RANK_BLOCK - N
     n_segs = n_cols * M
 
-    def kernel(chunks_ref, start_ref, css_ref, col_start_ref, col_count_ref,
-               off_ref, len_ref, fpr_ref, meta_ref, *val_refs):
+    def kernel(chunks_ref, start_ref, seed_ref, css_ref, col_start_ref,
+               col_count_ref, off_ref, len_ref, pres_ref, fpr_ref, meta_ref,
+               *val_refs):
         raw_u8 = chunks_ref[...].reshape(N)               # (N,) uint8
         data = chunks_ref[...].astype(jnp.int32)          # (C, K)
         state0 = start_ref[...].astype(jnp.int32).reshape(C)
+        col_seed = seed_ref[0, 0]                         # () int32
 
         # -- 1. replay (dfa_scan one-hot select chains, classes in carry) --
         def body(k, carry):
@@ -139,7 +141,10 @@ def _make_pipeline_kernel(
             [jnp.full((1,), -1, jnp.int32), last_rec_incl[:-1]]
         )
         base = jnp.where(last_rec_excl >= 0, fld_incl[jnp.clip(last_rec_excl, 0)], 0)
-        column_id = fld_excl - base
+        # Until the partition's own first record delimiter, ids are offset by
+        # the cross-shard column seed (offsets.symbol_ids_from_chunks at
+        # shard granularity; 0 for single-device callers).
+        column_id = fld_excl - base + jnp.where(last_rec_excl < 0, col_seed, 0)
         n_records = jnp.sum(rec_i32)
 
         # -- 3. tagging (tagging.tag_symbols per mode) ---------------------
@@ -208,8 +213,8 @@ def _make_pipeline_kernel(
             offset = jnp.full((n_segs + 1,), _I32_MAX, jnp.int32
                               ).at[seg].min(pos)[:-1]
             length = jnp.zeros((n_segs + 1,), jnp.int32).at[seg].add(1)[:-1]
-            present = length > 0
-            offset = jnp.where(present, offset, 0).reshape(n_cols, M)
+            present = (length > 0).reshape(n_cols, M)
+            offset = jnp.where(length > 0, offset, 0).reshape(n_cols, M)
             length = length.reshape(n_cols, M)
         else:
             flag_sorted = jnp.zeros((N,), jnp.bool_).at[dest].set(flag)
@@ -219,8 +224,17 @@ def _make_pipeline_kernel(
                 jnp.where(valid_t, pos, _I32_MAX)
             )[:-1].reshape(n_cols, M)
             present = end < _I32_MAX
-            start_f = jnp.concatenate(
-                [col_start[:n_cols, None], end[:, :-1] + 1], axis=1
+            # Same absent-tolerant predecessor recurrence as
+            # fields.field_index_terminated: start after the last *present*
+            # terminator (exclusive running max), the column start when
+            # none precedes.
+            prev_end = jax.lax.cummax(jnp.where(present, end, -1), axis=1)
+            prev_end = jnp.concatenate(
+                [jnp.full((n_cols, 1), -1, jnp.int32), prev_end[:, :-1]],
+                axis=1,
+            )
+            start_f = jnp.where(
+                prev_end >= 0, prev_end + 1, col_start[:n_cols, None]
             )
             length = jnp.where(present, end - start_f, 0).astype(jnp.int32)
             offset = jnp.where(present, start_f, 0).astype(jnp.int32)
@@ -245,8 +259,11 @@ def _make_pipeline_kernel(
             val_refs[2 * i + 1][...] = ok.astype(jnp.int32)[None, :]
 
         # -- §4.3 validation inputs + §4.4 carry scalars -------------------
+        # The head record's column count includes the cross-shard seed (its
+        # leading fields live on predecessor shards; seed is 0 single-device).
         rid = jnp.where(record_id < M, record_id, M)
-        fpr = jnp.zeros((M + 1,), jnp.int32).at[rid].add(fld_i32)[:-1] + 1
+        fpr = (jnp.zeros((M + 1,), jnp.int32).at[rid].add(fld_i32)[:-1] + 1
+               ).at[0].add(col_seed)
         last_record_end = jnp.max(jnp.where(is_rec, pos, -1))
 
         css_ref[...] = css[None, :]
@@ -254,6 +271,7 @@ def _make_pipeline_kernel(
         col_count_ref[...] = count[None, :]
         off_ref[...] = offset
         len_ref[...] = length
+        pres_ref[...] = present.astype(jnp.int32)
         fpr_ref[...] = fpr[None, :]
         meta_ref[...] = jnp.stack(
             [end_state, saw_inv, last_record_end, n_records]
@@ -272,6 +290,7 @@ def pipeline_call(
     max_records: int,
     selected,
     convert,
+    col_seed=None,
     interpret: bool = True,
 ):
     """Run the megakernel over one partition.
@@ -281,11 +300,15 @@ def pipeline_call(
       start_states: ``(C,) int32`` per-chunk start states (from the §3.1
         composite scan — the only upstream stage; it is O(C·S), never O(N)).
       convert: tuple of ``(col_idx, dtype, width)`` for non-str columns.
+      col_seed: ``() int32`` cross-shard column offset entering this
+        partition (field delimiters since the last record delimiter before
+        it) — the distributed driver's stitch; ``None``/0 single-device.
 
     Returns ``(css (N,) u8, col_start (n_cols+1,) i32, col_count, offset
-    (n_cols, M) i32, length, fields_per_rec (M,) i32, meta (4,) i32
-    [end_state, saw_invalid, last_record_end, n_records], values)`` with
-    ``values`` a tuple of ``(value (M,), ok (M,) bool)`` per convert entry.
+    (n_cols, M) i32, length, present (n_cols, M) bool, fields_per_rec (M,)
+    i32, meta (4,) i32 [end_state, saw_invalid, last_record_end,
+    n_records], values)`` with ``values`` a tuple of ``(value (M,), ok (M,)
+    bool)`` per convert entry.
     """
     c, k = chunks.shape
     n = c * k
@@ -300,6 +323,7 @@ def pipeline_call(
         jax.ShapeDtypeStruct((1, n_cols + 1), jnp.int32),  # col_count
         jax.ShapeDtypeStruct((n_cols, m), jnp.int32),      # field offset
         jax.ShapeDtypeStruct((n_cols, m), jnp.int32),      # field length
+        jax.ShapeDtypeStruct((n_cols, m), jnp.int32),      # field present
         jax.ShapeDtypeStruct((1, m), jnp.int32),           # fields_per_rec
         jax.ShapeDtypeStruct((1, 4), jnp.int32),           # meta scalars
     ]
@@ -310,19 +334,21 @@ def pipeline_call(
             jax.ShapeDtypeStruct((1, m), vdt),             # value
             jax.ShapeDtypeStruct((1, m), jnp.int32),       # ok
         ]
+    seed = jnp.zeros((), jnp.int32) if col_seed is None else col_seed
+    seed = jnp.asarray(seed, jnp.int32).reshape(1, 1)
     full = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
     out = pl.pallas_call(
         kernel,
         grid=(1,),
-        in_specs=[full((c, k)), full((c, 1))],
+        in_specs=[full((c, k)), full((c, 1)), full((1, 1))],
         out_specs=[full(s.shape) for s in fixed_shapes + conv_shapes],
         out_shape=fixed_shapes + conv_shapes,
         interpret=interpret,
-    )(chunks, start_states.astype(jnp.int32)[:, None])
-    css, col_start, col_count, off, ln, fpr, meta = out[:7]
+    )(chunks, start_states.astype(jnp.int32)[:, None], seed)
+    css, col_start, col_count, off, ln, pres, fpr, meta = out[:8]
     values = tuple(
-        (out[7 + 2 * i][0], out[7 + 2 * i + 1][0].astype(bool))
+        (out[8 + 2 * i][0], out[8 + 2 * i + 1][0].astype(bool))
         for i in range(len(convert))
     )
-    return (css[0], col_start[0], col_count[0], off, ln, fpr[0], meta[0],
-            values)
+    return (css[0], col_start[0], col_count[0], off, ln, pres.astype(bool),
+            fpr[0], meta[0], values)

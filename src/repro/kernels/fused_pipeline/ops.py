@@ -32,6 +32,7 @@ class FusedParse(NamedTuple):
     col_count: jax.Array       # (n_cols+1,) int32
     offset: jax.Array          # (n_cols, max_records) int32
     length: jax.Array          # (n_cols, max_records) int32
+    present: jax.Array         # (n_cols, max_records) bool
     fields_per_rec: jax.Array  # (max_records,) int32 — §4.3 column counts
     end_state: jax.Array       # () int32
     saw_invalid: jax.Array     # () bool — any chunk hit the invalid sink
@@ -60,23 +61,26 @@ def fused_parse(
     convert: Tuple[Tuple[str, int, str], ...],
     int_width: int,
     float_width: int,
+    col_seed=None,
     interpret: bool = True,
 ) -> FusedParse:
     """One partition through the megakernel (see module docstring).
 
     ``convert`` is the plan's ``(name, col_idx, dtype)`` tuple — ``str``
     entries are served from the field index outside the kernel; the rest
-    convert in-kernel through the shared numparse cores.
+    convert in-kernel through the shared numparse cores.  ``col_seed`` is
+    the distributed stitch's cross-shard column offset (see
+    ``fused_pipeline.pipeline_call``).
     """
     kconv = tuple(
         (c, dtype, _width_for(dtype, int_width, float_width))
         for _, c, dtype in convert if dtype != "str"
     )
-    css, col_start, col_count, off, ln, fpr, meta, kvals = (
+    css, col_start, col_count, off, ln, pres, fpr, meta, kvals = (
         fused_pipeline.pipeline_call(
             chunks, start_states, dfa, tagging=tagging, n_cols=n_cols,
             max_records=max_records, selected=selected, convert=kconv,
-            interpret=interpret,
+            col_seed=col_seed, interpret=interpret,
         )
     )
 
@@ -104,6 +108,7 @@ def fused_parse(
         col_count=col_count,
         offset=off,
         length=ln,
+        present=pres,
         fields_per_rec=fpr,
         end_state=meta[0],
         saw_invalid=meta[1].astype(bool),

@@ -28,6 +28,17 @@ from repro.core.parser import Parser
 from repro.core.streaming import StreamSession
 
 
+def mesh_key(mesh) -> Optional[Tuple]:
+    """Hashable identity of a device mesh for session cache keys: two
+    meshes over the same axes and the same devices in the same order
+    share sessions; ``None`` (single-device) is its own key."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names),
+            tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
 class PlanRegistry:
     """Plan-keyed cache of compiled :class:`Parser`\\ s and
     :class:`StreamSession`\\ s (see module docstring)."""
@@ -56,22 +67,28 @@ class PlanRegistry:
         return k, p
 
     def session(self, cfg, partition_bytes: int, max_carry_bytes: int,
-                n_streams: int, key: Optional[Tuple] = None
+                n_streams: int, key: Optional[Tuple] = None,
+                mesh=None, mesh_axis: str = "streams",
                 ) -> Tuple[Tuple, StreamSession]:
         """The shared session for ``cfg``'s plan key at this geometry.
 
         One session per ``(plan_key, partition_bytes, max_carry_bytes,
-        n_streams)`` — its jitted step (and the step's jit cache) is reused
-        across every batch the service runs at that width.
+        n_streams, mesh_key)`` — its jitted step (and the step's jit
+        cache) is reused across every batch the service runs at that
+        width.  With ``mesh``, the session's lanes are sharded over
+        ``mesh_axis`` (``n_streams`` must divide by its size — the
+        service's tier filter guarantees that).
         """
         k, parser = self.parser(cfg, key)
-        sk = (k, int(partition_bytes), int(max_carry_bytes), int(n_streams))
+        sk = (k, int(partition_bytes), int(max_carry_bytes), int(n_streams),
+              mesh_key(mesh))
         with self._lock:
             s = self._sessions.get(sk)
             if s is None:
                 s = StreamSession(
                     parser, partition_bytes,
                     max_carry_bytes=max_carry_bytes, n_streams=n_streams,
+                    mesh=mesh, mesh_axis=mesh_axis,
                 )
                 self._sessions[sk] = s
                 self.session_builds += 1

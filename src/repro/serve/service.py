@@ -174,6 +174,13 @@ class ParseService:
         backpressure depth).
       admission_wait: how long the dispatcher holds a group open for
         late-arriving compatible tenants before launching its batch.
+      mesh: optional device mesh — every batch's session lane-shards its
+        ``n_streams`` axis over ``mesh_axis`` (see
+        :class:`~repro.core.streaming.StreamSession`), spreading tenant
+        lanes across devices with per-lane fault isolation unchanged.
+        Tiers are filtered to multiples of the axis size so every batch
+        width shards evenly; raises if no tier survives.
+      mesh_axis: the mesh axis tenant lanes shard over.
       start: spawn the dispatcher thread.  ``start=False`` gives the
         synchronous test mode — call :meth:`step` to run one admission
         decision (and its whole batch) on the calling thread.
@@ -183,10 +190,25 @@ class ParseService:
 
     def __init__(self, *, tiers: Sequence[int] = DEFAULT_TIERS,
                  max_queued_partitions: int = 8,
-                 admission_wait: float = 0.02, start: bool = True):
+                 admission_wait: float = 0.02,
+                 mesh=None, mesh_axis: str = "streams",
+                 start: bool = True):
         self.tiers = tuple(sorted(int(t) for t in tiers))
         if not self.tiers or self.tiers[0] < 1:
             raise ValueError(f"tiers must be positive, got {tiers}")
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        if mesh is not None:
+            if mesh_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no axis {mesh_axis!r}: {mesh.axis_names}")
+            d = int(mesh.shape[mesh_axis])
+            kept = tuple(t for t in self.tiers if t % d == 0)
+            if not kept:
+                raise ValueError(
+                    f"no tier in {self.tiers} divisible by mesh axis "
+                    f"{mesh_axis!r} size {d}")
+            self.tiers = kept
         self.max_queued_partitions = int(max_queued_partitions)
         self.admission_wait = float(admission_wait)
         self.registry = PlanRegistry()
@@ -305,7 +327,8 @@ class ParseService:
         key, partition_bytes, max_carry_bytes = group
         tier = self.tier_for(len(batch))
         skey, session = self.registry.session(
-            batch[0].cfg, partition_bytes, max_carry_bytes, tier, key=key)
+            batch[0].cfg, partition_bytes, max_carry_bytes, tier, key=key,
+            mesh=self.mesh, mesh_axis=self.mesh_axis)
         for lane, t in enumerate(batch):
             t.lane, t.session_key = lane, skey
         # Spare lanes run inert: empty source → one empty flush round.

@@ -1,13 +1,57 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
-tests and benches must see the real single CPU device; only launch/dryrun.py
-fakes 512 devices (in its own process)."""
+tests and benches must see the real single CPU device; multi-device tests
+go through :func:`run_with_devices`, which isolates the
+``--xla_force_host_platform_device_count`` override in a subprocess."""
 import os
+import subprocess
 import sys
+import textwrap
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+#: Subprocess exit code meaning "requested device count unavailable" —
+#: mapped to pytest.skip (an explicit skip, never a false pass).
+DEVICE_SKIP_RC = 77
+
+
+def run_with_devices(code: str, n_devices: int, timeout: float = 900,
+                     env: dict = None) -> str:
+    """Run ``code`` in a subprocess under ``n_devices`` virtual XLA host
+    devices and return its stdout.
+
+    The override goes through the child's environment (set *before* any
+    jax import, the only reliable ordering) so it never leaks into this
+    process.  The child double-checks ``len(jax.devices())`` and exits
+    ``DEVICE_SKIP_RC`` on a mismatch (e.g. a platform where the host
+    override is ignored), which surfaces here as ``pytest.skip`` — an
+    explicit skip instead of silently testing the wrong topology.
+    ``N_DEVICES`` is predefined in the child's namespace.
+    """
+    child_env = dict(os.environ, **(env or {}))
+    kept = [f for f in child_env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count=")]
+    kept.append(f"--xla_force_host_platform_device_count={int(n_devices)}")
+    child_env["XLA_FLAGS"] = " ".join(kept)
+    prelude = textwrap.dedent(f"""
+        import sys
+        sys.path.insert(0, {_SRC!r})
+        import jax
+        if len(jax.devices()) != {int(n_devices)}:
+            sys.exit({DEVICE_SKIP_RC})
+        N_DEVICES = {int(n_devices)}
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=child_env)
+    if proc.returncode == DEVICE_SKIP_RC:
+        pytest.skip(f"{n_devices} XLA host devices unavailable")
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
 
 
 @pytest.fixture(scope="session")

@@ -150,11 +150,13 @@ def test_distributed_parity():
         cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMAS["csv"],
                            max_records=64, chunk_size=16, backend=be,
                            partition_impl="kernel" if be == "pallas" else "auto")
-        chunks = Parser(cfg).prepare(data)
-        shards[be] = DistributedParser(cfg, mesh).parse_chunks(jnp.asarray(chunks))
+        dp = DistributedParser(cfg, mesh)
+        shards[be] = dp.parse_chunks(dp.prepare(data))
     r, q = shards["reference"], shards["pallas"]
-    for f in r._fields:
-        assert np.array_equal(np.asarray(getattr(r, f)), np.asarray(getattr(q, f))), f
+    ra, qa = jax.tree_util.tree_leaves(r), jax.tree_util.tree_leaves(q)
+    assert len(ra) == len(qa)
+    for a, b in zip(ra, qa):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (a, b)
 
 
 def test_unknown_backend_rejected():

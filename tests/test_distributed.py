@@ -1,98 +1,234 @@
 """Distributed parser: multi-device shard_map pipeline equals single-device
-parse.  Runs in a subprocess so the 8-device host-platform override never
-leaks into other tests."""
-import os
-import subprocess
-import sys
-import textwrap
+parse — end to end, *including* materialization/typeconv on every shard.
 
+Every test runs through ``conftest.run_with_devices`` (subprocess-isolated
+``--xla_force_host_platform_device_count``, explicit skip if the topology
+is unavailable), so the overrides never leak into other tests.
+
+Coverage:
+  * index-only sharded parse reassembles the oracle strings (legacy pin);
+  * converted sharded parse + host ``assemble`` is bit-identical to
+    ``Parser.to_arrow`` for D∈{1,2,4,8} across backends × tagging modes ×
+    ``fuse_pipeline`` (the tentpole guarantee);
+  * the compiled sharded executable's collective traffic is O(D·|S|) —
+    byte-for-byte identical across a 4× input-size change;
+  * lane-sharded ``StreamSession`` is bit-identical to the single-device
+    batched engine and its step compiles with ZERO collectives (the
+    carry-locality invariant);
+  * the mesh-aware ``ParseService`` serves identical tenant results.
+"""
 import pytest
 
-_SCRIPT = textwrap.dedent(
-    """
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import sys
-    sys.path.insert(0, %(src)r)
-    import numpy as np
-    import jax
-    import jax.numpy as jnp
+from conftest import run_with_devices
 
-    from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
-    from repro.core.distributed import DistributedParser
+_COMMON = """
+import numpy as np
+import jax
+import jax.numpy as jnp
 
-    assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core.distributed import DistributedParser
 
-    rng = np.random.default_rng(7)
+def csv_data(n_rows, seed=7):
+    rng = np.random.default_rng(seed)
     rows = []
-    for i in range(200):
-        body = "".join(rng.choice(list('ab,\\n"x')) for _ in range(int(rng.integers(0, 12))))
-        rows.append((str(i), body.replace('"', '""'), f"{i}.5"))
-    data = "".join('%%s,"%%s",%%s\\n' %% r for r in rows).encode()
+    for i in range(n_rows):
+        body = "".join(rng.choice(list('ab,\\n"x'))
+                       for _ in range(int(rng.integers(0, 12))))
+        rows.append((str(i), body.replace('"', '""'), f"{i}.25"))
+    return rows, "".join('%s,"%s",%s\\n' % r for r in rows).encode()
 
-    schema = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"))
-    cfg = ParserConfig(dfa=make_csv_dfa(), schema=schema, max_records=256, chunk_size=32)
-
-    single = Parser(cfg)
-    chunks = single.prepare(data)
-    # pad chunk count to a multiple of the device count
-    n_dev = 8
-    c = chunks.shape[0]
-    pad = (-c) %% n_dev
-    if pad:
-        from repro.core.dfa import PAD_BYTE
-        chunks = np.concatenate([chunks, np.full((pad, chunks.shape[1]), PAD_BYTE, np.uint8)])
-
-    ref = single.parse_chunks(jnp.asarray(chunks))
-
-    dp = DistributedParser(cfg, mesh, axis_names=("data", "model"))
-    got = dp.parse_chunks(jnp.asarray(chunks))
-
-    # 1) identical symbol classification across the device boundary cuts
-    from repro.core.transition import transition_pipeline
-    cls_ref, _, _ = transition_pipeline(jnp.asarray(chunks), cfg.dfa)
-    np.testing.assert_array_equal(
-        np.asarray(got.classes).reshape(-1), np.asarray(cls_ref).reshape(-1)
-    )
-
-    # 2) global record count matches
-    assert int(np.asarray(got.n_records).reshape(-1)[0]) == len(rows)
-
-    # 3) per-shard columnar output reassembles into the oracle values
-    n_dev_shards = 8
-    field_off = np.asarray(got.field_offset).reshape(n_dev_shards, len(schema.columns), -1)
-    field_len = np.asarray(got.field_length).reshape(n_dev_shards, len(schema.columns), -1)
-    css = np.asarray(got.css).reshape(n_dev_shards, -1)
-    rec_base = np.asarray(got.rec_base).reshape(-1)
-
-    texts = {}
-    for d in range(n_dev_shards):
-        base = int(rec_base[d])
-        # records fully inside shard d (shards split mid-record; a record's
-        # value bytes can span shards only via the tail/head records)
-        for r in range(field_len.shape[2]):
-            ln = int(field_len[d, 1, r])
-            off = int(field_off[d, 1, r])
-            if ln or r + base < len(rows):
-                texts.setdefault(base + r, []).append(bytes(css[d, off:off+ln]))
-    ok = 0
-    for i, row in enumerate(rows):
-        want = row[1].replace('""', '"')
-        got_txt = b"".join(texts.get(i, [])).decode()
-        assert got_txt == want, (i, got_txt, want)
-        ok += 1
-    print("DISTRIBUTED_OK", ok)
-    """
-)
+SCHEMA = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"))
+"""
 
 
 @pytest.mark.slow
 def test_distributed_matches_single():
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    code = _SCRIPT % {"src": os.path.abspath(src)}
-    proc = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True, timeout=600
-    )
-    assert proc.returncode == 0, proc.stderr[-4000:]
-    assert "DISTRIBUTED_OK" in proc.stdout
+    """Legacy pin: per-shard field index over an 8-device (4, 2) mesh
+    reassembles every oracle string, including mid-record shard cuts."""
+    out = run_with_devices(_COMMON + """
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+rows, data = csv_data(200)
+cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=256,
+                   chunk_size=32)
+
+dp = DistributedParser(cfg, mesh, axis_names=("data", "model"))
+chunks = dp.prepare(data)
+got = dp.parse_chunks(chunks)
+
+from repro.core.transition import transition_pipeline
+cls_ref, _, _ = transition_pipeline(chunks, cfg.dfa)
+np.testing.assert_array_equal(
+    np.asarray(got.classes).reshape(-1), np.asarray(cls_ref).reshape(-1))
+assert int(np.asarray(got.n_records).reshape(-1)[0]) == len(rows)
+
+arrow = dp.assemble(got)
+off, dat = arrow["b"]["offsets"], arrow["b"]["data"]
+for i, row in enumerate(rows):
+    want = row[1].replace('""', '"')
+    assert bytes(dat[off[i]:off[i + 1]]).decode() == want, (i, want)
+print("DISTRIBUTED_OK", len(rows))
+""", 8)
+    assert "DISTRIBUTED_OK" in out
+
+
+# (backend, fuse_pipeline, tagging) — three combos per device count cover
+# both backends, both execute paths, and all three tagging layouts across
+# the sweep without a full 9-way matrix per D.
+_COMBOS = (("reference", False, "tagged"),
+           ("pallas", False, "vector"),
+           ("pallas", True, "inline"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_dev", (1, 2, 4, 8))
+def test_sharded_converted_bit_identity(n_dev):
+    """The tentpole guarantee: sharded end-to-end parse *with conversion*
+    (``assemble``) is bit-identical to ``Parser.to_arrow`` — validation
+    scalars included — for every backend/path/tagging combo."""
+    out = run_with_devices(_COMMON + f"COMBOS = {_COMBOS!r}\n" + """
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+rows, data = csv_data(60)
+for be, fuse, tagging in COMBOS:
+    cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=128,
+                       chunk_size=16, backend=be, tagging=tagging,
+                       fuse_pipeline=fuse)
+    p = Parser(cfg)
+    res = p.parse_chunks(p.prepare(data))
+    ref = p.to_arrow(res)
+
+    dp = DistributedParser(cfg, mesh)
+    sh = dp.parse_chunks(dp.prepare(data))
+    got = dp.assemble(sh)
+
+    key = (be, fuse, tagging)
+    assert int(sh.n_records) == int(res.validation.n_records), key
+    for f in ("ok", "end_state_ok", "no_invalid", "min_columns",
+              "max_columns"):
+        a = np.asarray(getattr(sh.validation, f)).reshape(-1)[0]
+        b = np.asarray(getattr(res.validation, f))
+        assert np.array_equal(a, b), (key, f, a, b)
+    for col in got:
+        for k in got[col]:
+            a, b = np.asarray(got[col][k]), np.asarray(ref[col][k])
+            assert a.dtype == b.dtype and np.array_equal(a, b), (key, col, k)
+    print("OK", key)
+print("CONVERTED_OK")
+""", n_dev)
+    assert "CONVERTED_OK" in out
+
+
+@pytest.mark.slow
+def test_collectives_are_input_size_independent():
+    """The O(D·|S|) pin: the compiled sharded executable's collective
+    traffic is summary-sized — byte-for-byte identical across a 4× change
+    in input size (no collective ever moves input-sized data)."""
+    out = run_with_devices(_COMMON + """
+from repro.launch.dryrun import parse_collective_bytes
+
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=128,
+                   chunk_size=32)
+dp = DistributedParser(cfg, mesh)
+
+stats = []
+for n_chunks in (16, 64):  # 4x apart, both divisible by 8 devices
+    hlo = dp.lower(n_chunks, 32).compile().as_text()
+    stats.append(parse_collective_bytes(hlo))
+(small_b, small_c), (big_b, big_c) = stats
+assert sum(small_c.values()) > 0, small_c     # the stitch does gather
+assert small_b == big_b, (small_b, big_b)     # ...but O(D*|S|) only
+assert small_c == big_c, (small_c, big_c)
+print("COLLECTIVES_OK", small_b)
+""", 8)
+    assert "COLLECTIVES_OK" in out
+
+
+@pytest.mark.slow
+def test_lane_sharded_streaming_bit_identity():
+    """Lane-sharded StreamSession: identical yields + stats vs the
+    unmeshed batched engine, and ZERO collectives in the compiled step
+    (each device owns its lanes' carry — the carry-locality invariant)."""
+    out = run_with_devices(_COMMON + """
+from repro.core.streaming import StreamSession, StreamOverflow
+
+devs = jax.devices()
+mesh = jax.sharding.Mesh(np.array(devs), ("streams",))
+S = 2 * len(devs)
+cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=64,
+                   chunk_size=16, backend="pallas")
+p = Parser(cfg)
+sources = [[("".join("%d,lane%d,%d.5\\n" % (s * 100 + i, s, i)
+                     for i in range(7 + s))).encode()]
+           for s in range(S)]
+
+def run(mesh_arg):
+    sess = StreamSession(p, partition_bytes=48, max_carry_bytes=48,
+                         n_streams=S, mesh=mesh_arg)
+    rounds = []
+    for s, r, n in sess.parse_streams(sources):
+        assert not isinstance(r, StreamOverflow)
+        rounds.append((s, n, jax.tree_util.tree_map(np.asarray, r)))
+    return sess, rounds
+
+base_sess, base = run(None)
+shd_sess, shd = run(mesh)
+assert len(base) == len(shd)
+for (s0, n0, r0), (s1, n1, r1) in zip(base, shd):
+    assert (s0, n0) == (s1, n1)
+    for a, b in zip(jax.tree_util.tree_leaves(r0),
+                    jax.tree_util.tree_leaves(r1)):
+        assert np.array_equal(a, b), s0
+assert ([vars(a) for a in base_sess.stats]
+        == [vars(b) for b in shd_sess.stats])
+
+# zero-collectives pin on the compiled lane-sharded step
+cb, cl = shd_sess._init_carry()
+txt = shd_sess._step.lower(
+    cb, cl, jnp.zeros((S, 48), jnp.uint8), jnp.zeros((S,), jnp.int32),
+    jnp.zeros((S,), bool)).compile().as_text()
+bad = [l for l in txt.splitlines()
+       if any(c in l for c in ("all-gather", "all-reduce",
+                               "collective-permute", "all-to-all"))]
+assert not bad, bad[:5]
+print("STREAMING_OK", S)
+""", 4)
+    assert "STREAMING_OK" in out
+
+
+@pytest.mark.slow
+def test_mesh_aware_service():
+    """ParseService(mesh=...): tiers filter to multiples of the axis size
+    and tenants get results identical to the unmeshed service."""
+    out = run_with_devices(_COMMON + """
+from repro.serve.service import ParseService, TenantResult
+
+cfg = ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, max_records=64,
+                   chunk_size=16, backend="pallas")
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("streams",))
+
+def serve(svc):
+    data = [("%d,x%d,%d.5\\n" % (i, i, i)).encode() * 4 for i in range(5)]
+    ts = [svc.submit(cfg, d, partition_bytes=64, name=f"t{i}")
+          for i, d in enumerate(data)]
+    while svc.step() is not None:
+        pass
+    out = {}
+    for t in ts:
+        st = t.wait(timeout=60)
+        assert not t.failed
+        chunks = []
+        for item in t.results():
+            assert isinstance(item, TenantResult), item
+            arrow = svc.registry.parser(cfg)[1].to_arrow(item.result)
+            chunks.append(np.asarray(arrow["a"]["values"])[:item.n_records])
+        out[t.name] = (st.records, [c.tolist() for c in chunks])
+    return out
+
+base = serve(ParseService(tiers=(1, 4, 16), start=False))
+svc = ParseService(tiers=(1, 4, 16), mesh=mesh, start=False)
+assert svc.tiers == (4, 16), svc.tiers
+assert serve(svc) == base
+print("SERVICE_OK")
+""", 4)
+    assert "SERVICE_OK" in out

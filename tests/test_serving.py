@@ -84,7 +84,7 @@ def test_tier_selection_and_recompile_count(rng):
     svc.step()
     assert svc.registry.session_builds == 1
     (sk, sess), = svc.registry._sessions.items()
-    assert sk[-1] == 4 and sess.n_streams == 4
+    assert sk[3] == 4 and sess.n_streams == 4  # (…, n_streams, mesh_key)
     assert sess._step._cache_size() == 1
     for t in ts:
         assert t.wait(5).records == 6 and not t.failed
@@ -101,7 +101,7 @@ def test_tier_selection_and_recompile_count(rng):
     t1 = svc.submit(_cfg(), d, partition_bytes=128)
     svc.step()
     assert svc.registry.session_builds == 2
-    assert t1.session_key[-1] == 1
+    assert t1.session_key[3] == 1
     assert t1.wait(5).records == 6
 
 

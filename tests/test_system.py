@@ -1,15 +1,12 @@
 """End-to-end system test: raw CSV bytes → ParPaRaw on-device parse →
 token pipeline → sharded training step → loss decreases; plus the
 dry-run machinery itself on a subprocess-local multi-device mesh."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import run_with_devices
 
 
 def test_parse_train_end_to_end():
@@ -55,22 +52,15 @@ def test_parse_train_end_to_end():
 def test_dryrun_machinery_512_mesh():
     """Exercise launch/dryrun's build_cell path end to end in a subprocess
     (the full sweep runs the same code)."""
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-        import sys
-        sys.path.insert(0, %r)
+    out = run_with_devices("""
         from repro.launch.dryrun import build_cell
         out = build_cell("qwen2-1.5b", "decode_32k", multi_pod=True)
         assert out["status"] == "ok", out
         assert out["devices"] == 512
         assert out["memory"]["temp_bytes"] > 0
         print("DRYRUN_OK", sum(out["collective_counts"].values()))
-    """) % os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=900)
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    assert "DRYRUN_OK" in proc.stdout
+    """, 512)
+    assert "DRYRUN_OK" in out
 
 
 def test_roofline_collective_parser():
