@@ -28,11 +28,21 @@
             session), with the batched-vs-sequential speedup and the
             honest throughput denominators (``bytes_in`` vs
             ``bytes_reparsed``) recorded per variant.
+  * formats_sweep — GB/s per *registered format* (csv / jsonl / zone /
+            clf through ``repro.core.formats`` + the per-format tuning in
+            ``repro.configs.parse_formats``) × backend, with cross-variant
+            bit-identity per format — prices the paper's format-agnostic
+            engine claim: a new format is a new table, and here is what it
+            costs relative to CSV on identical machinery.
 
 Standalone CLI::
 
     PYTHONPATH=src python -m benchmarks.bench_parser \
         [--backend all] [--workload all] [--json BENCH_parser.json] [--records 250]
+
+A partial run (``--workload formats`` etc.) merges its rows into an
+existing ``BENCH_parser.json`` instead of clobbering the other workloads'
+entries; the existing file's ``meta`` is kept (full-run provenance).
 
 All wall-clock on the CPU backend (this container's "device"); the TPU-
 projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
@@ -77,6 +87,21 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
             "speedup": float,             # fused, us_per_call ratio (staged/
             "no_slower": bool             # fused); whole-pipeline-fusion
           }                               # accountability metric
+        },
+        "formats": {                      # per-registered-format workload
+          "<csv|jsonl|zone|clf>": {
+            "n_records": int,             # records in the synthetic corpus
+            "bytes": int,                 # raw input size
+            "outputs_match": bool,        # all variants bit-identical
+            "variants": {
+              "<reference|pallas|pallas-fused>": {
+                "us_per_call": float,     # best-of e2e parse wall clock
+                "gbps": float,            # bytes / us_per_call
+                "records": int,           # records the parse reported
+                "execute_path": str       # staged | fused (resolved tier)
+              }
+            }
+          }
         },
         "stream": {                       # §4.4 streaming-engine workload
           "n_records_per_stream": int,    # CLI --records (reference streams;
@@ -183,6 +208,7 @@ import csv as pycsv
 import dataclasses
 import io
 import json
+import os
 import time
 
 import jax
@@ -439,6 +465,110 @@ def _base_report(n_records: int) -> dict:
     stream-only and materialize paths can never emit diverging meta)."""
     return {"meta": {"interpret": True, "n_records_base": n_records},
             "workloads": {}}
+
+
+#: Formats-workload registry names benched per run: jsonl + zone are the
+#: format-layer dialects, clf the log format, csv the baseline every other
+#: row compares against (same engine, different tables).
+FORMATS_BENCH = ("csv", "jsonl", "zone", "clf")
+
+
+def _format_payload(fmt: str, n: int) -> bytes:
+    """Deterministic synthetic corpus per dialect (no RNG — the perf log
+    must describe a byte-stable input across runs)."""
+    if fmt == "csv":
+        lines = ["%d,user_%d,%d.%02d,2024-01-%02d"
+                 % (i, i, i % 97, i % 100, i % 28 + 1) for i in range(n)]
+    elif fmt == "jsonl":
+        lines = ['{"id": %d, "name": "user_%d", "score": %d.%02d}'
+                 % (i, i, i % 97, i % 100) for i in range(n)]
+    elif fmt == "zone":
+        lines = ["host%d %d IN A 10.0.%d.%d"
+                 % (i, 300 + i % 3600, i % 256, i * 7 % 256)
+                 for i in range(n)]
+        # every 16th record spans lines via parens (the carry-relevant
+        # shape) and trails a comment
+        for i in range(0, n, 16):
+            lines[i] = ("host%d %d ( IN\n\tA ) 10.0.%d.%d;rr"
+                        % (i, 300 + i % 3600, i % 256, i * 7 % 256))
+    elif fmt == "clf":
+        lines = ['10.0.0.%d [01/Jan/2024 00:%02d:%02d] "GET /item/%d" %d'
+                 % (i % 256, i // 60 % 60, i % 60, i, 200 + i % 300)
+                 for i in range(n)]
+    else:
+        raise ValueError(f"no payload generator for format {fmt!r}")
+    return ("\n".join(lines) + "\n").encode()
+
+
+def formats_sweep(n_records=250, backends=("reference", "pallas")):
+    """GB/s per registered format × backend on the shared engine.
+
+    Parsers come from ``repro.configs.parse_formats.tuned_parser_config``
+    (registry DFA + per-format knobs); every variant of a format must be
+    bit-identical, so a dialect whose tables break only one backend's
+    kernels cannot land a green perf row."""
+    from repro.core import Parser
+    from repro.core import backends as backends_mod
+    from repro.core import stages as stages_mod
+    from repro.configs.parse_formats import tuned_parser_config
+
+    out = {}
+    for fmt in FORMATS_BENCH:
+        data = _format_payload(fmt, n_records)
+        entry = {"n_records": n_records, "bytes": len(data), "variants": {}}
+        parsers, best, results = {}, {}, {}
+        for label in ("reference", "pallas", "pallas-fused"):
+            base = "pallas" if label == "pallas-fused" else label
+            if base not in backends:
+                continue
+            p = Parser(tuned_parser_config(
+                fmt, max_records=1 << 12, backend=base,
+                fuse_pipeline=label == "pallas-fused",
+                # pin the radix partition kernel on pallas (interpret-mode
+                # "auto" would pick the jnp pass)
+                partition_impl="kernel" if base == "pallas" else "auto"))
+            chunks = jnp.asarray(p.prepare(data))
+            for _ in range(2):  # compile + warm
+                jax.block_until_ready(p.parse_chunks(chunks))
+            parsers[label] = (p, chunks)
+            best[label] = float("inf")
+        # round-robin best-of (see materialize_sweep on burst noise)
+        for _ in range(6):
+            for label, (p, chunks) in parsers.items():
+                t0 = time.perf_counter()
+                res = p.parse_chunks(chunks)
+                jax.block_until_ready(res)
+                best[label] = min(best[label], time.perf_counter() - t0)
+                results[label] = res
+        for label, (p, chunks) in parsers.items():
+            dt = best[label]
+            n_got = int(results[label].validation.n_records)
+            entry["variants"][label] = {
+                "us_per_call": dt * 1e6,
+                "gbps": gbps(len(data), dt),
+                "records": n_got,
+                "execute_path": stages_mod.resolved_execute_path(
+                    p.plan, backends_mod.get_backend(p.cfg.backend),
+                    int(chunks.size)),
+            }
+            emit(f"formats/{fmt}/{label}", dt * 1e6,
+                 f"{gbps(len(data), dt):.3f}GB/s;records={n_got}")
+        labels = sorted(results)
+        if labels:
+            base_r = results[labels[0]]
+            same = all(
+                np.array_equal(np.asarray(base_r.css),
+                               np.asarray(results[l].css))
+                and all(
+                    np.array_equal(
+                        np.asarray(getattr(base_r.values[c], f)),
+                        np.asarray(getattr(results[l].values[c], f)))
+                    for c in base_r.values for f in ("value", "valid", "empty"))
+                for l in labels[1:])
+            entry["outputs_match"] = bool(same)
+            emit(f"formats/{fmt}/outputs_match", 0.0, f"all={same}")
+        out[fmt] = entry
+    return out
 
 
 #: Stream-workload batch sizes (concurrent tenants per dispatch).
@@ -865,8 +995,8 @@ def main(argv=None):
     ap.add_argument("--backend", default="all",
                     choices=["all", "reference", "pallas"])
     ap.add_argument("--workload", default="all",
-                    choices=["all", "yelp", "taxi", "stream", "serve",
-                             "distributed"])
+                    choices=["all", "yelp", "taxi", "formats", "stream",
+                             "serve", "distributed"])
     ap.add_argument("--json", default="BENCH_parser.json", metavar="PATH",
                     help="machine-readable sweep output ('' to skip)")
     ap.add_argument("--records", type=int, default=250,
@@ -883,7 +1013,7 @@ def main(argv=None):
         # subprocess mode: the per-D mesh sweep body (see distributed_sweep)
         distributed_child(args.records, backends)
         return
-    workloads = (("yelp", "taxi", "stream", "serve", "distributed")
+    workloads = (("yelp", "taxi", "formats", "stream", "serve", "distributed")
                  if args.workload == "all" else (args.workload,))
     print("name,us_per_call,derived")
     mat = tuple(w for w in workloads if w in ("yelp", "taxi"))
@@ -892,6 +1022,9 @@ def main(argv=None):
                                    workloads=mat, json_path="")
     else:
         report = _base_report(args.records)
+    if "formats" in workloads:
+        report["workloads"]["formats"] = formats_sweep(
+            n_records=args.records, backends=backends)
     if "stream" in workloads:
         report["workloads"]["stream"] = stream_sweep(
             n_records=args.records, backends=backends)
@@ -902,6 +1035,13 @@ def main(argv=None):
         report["workloads"]["distributed"] = distributed_sweep(
             n_records=args.records, backends=backends)
     if args.json:
+        if args.workload != "all" and os.path.exists(args.json):
+            # partial runs merge into the existing log instead of dropping
+            # the other workloads' rows; meta keeps full-run provenance
+            with open(args.json) as f:
+                old = json.load(f)
+            old.setdefault("workloads", {}).update(report["workloads"])
+            report = old
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

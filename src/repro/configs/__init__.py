@@ -1,5 +1,7 @@
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.parse_formats import FormatTuning, TUNINGS, tuned_parser_config, tuning_for
 from repro.configs.registry import ARCH_IDS, get_config
 
 __all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "shape_applicable",
-           "ARCH_IDS", "get_config"]
+           "ARCH_IDS", "get_config",
+           "FormatTuning", "TUNINGS", "tuned_parser_config", "tuning_for"]

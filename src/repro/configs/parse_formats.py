@@ -1,0 +1,73 @@
+"""Per-format parse tuning presets on top of the core format registry.
+
+``repro.core.formats`` owns *what* a format is (DFA, tagging, schema);
+this module owns *how to run it well*: field-width and partition-size
+knobs per dialect, derived from the shapes the format actually produces
+(zone TTLs are short ints, CLF request strings are long, JSONL nests blow
+up field lengths).  Kept in ``configs`` so core carries no tuning policy
+and benchmarks/services share one source of defaults.
+
+    >>> from repro.configs.parse_formats import tuned_parser_config
+    >>> cfg = tuned_parser_config("jsonl", backend="pallas", max_records=4096)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import formats
+from repro.core.parser import ParserConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatTuning:
+    """Per-format knob overrides applied under any caller overrides.
+
+    ``chunk_size`` trades scan depth against per-chunk state-vector work
+    for the format's typical record length; ``int_width``/``float_width``
+    bound the fused typeconv windows (smaller widths → smaller VMEM
+    tiles); ``stream_partition_bytes`` is the streaming partition size at
+    which carry re-parse overhead stays <~1% for the format's record
+    lengths (multi-line zone records need headroom).
+    """
+
+    chunk_size: int = 64
+    int_width: int = 11
+    float_width: int = 24
+    stream_partition_bytes: int = 1 << 16
+
+
+TUNINGS: Dict[str, FormatTuning] = {
+    "csv": FormatTuning(),
+    "csv+comment": FormatTuning(),
+    "tsv": FormatTuning(),
+    "simple": FormatTuning(chunk_size=32),
+    # CLF records are long (request strings) but its only numeric column is
+    # a 3-digit status code: narrow int windows, bigger chunks.
+    "clf": FormatTuning(chunk_size=128, int_width=6),
+    # JSONL: nested raw-subtext fields stretch records; TTL-free floats
+    # keep the default width.
+    "jsonl": FormatTuning(chunk_size=128),
+    # Zone: TTLs are ≤ 10 digits, records can span lines via parens, so
+    # streaming partitions get extra carry headroom.
+    "zone": FormatTuning(chunk_size=64, int_width=10,
+                         stream_partition_bytes=1 << 17),
+}
+
+_DEFAULT = FormatTuning()
+
+
+def tuning_for(name: str) -> FormatTuning:
+    formats.get_format(name)  # raise on unknown formats, not silent default
+    return TUNINGS.get(name, _DEFAULT)
+
+
+def tuned_parser_config(name: str, **overrides) -> ParserConfig:
+    """`formats.parser_config` with this module's tuning filled in.
+
+    Caller overrides win over tuning; tuning wins over core defaults.
+    """
+    t = tuning_for(name)
+    for knob in ("chunk_size", "int_width", "float_width"):
+        overrides.setdefault(knob, getattr(t, knob))
+    return formats.parser_config(name, **overrides)

@@ -11,11 +11,21 @@ from repro.core.dfa import (
     TERMINATOR_BYTE,
     Dfa,
     make_csv_dfa,
+    make_jsonl_dfa,
     make_log_dfa,
     make_simple_dfa,
+    make_zone_dfa,
 )
 from repro.core.backends import ParseBackend, available_backends, get_backend, register_backend
 from repro.core.parser import Column, ParseResult, Parser, ParserConfig, Schema
+from repro.core.formats import (
+    FormatSpec,
+    attach_oracle,
+    available_formats,
+    get_format,
+    parser_config,
+    register_format,
+)
 
 __all__ = [
     "ParseBackend",
@@ -30,8 +40,16 @@ __all__ = [
     "TERMINATOR_BYTE",
     "Dfa",
     "make_csv_dfa",
+    "make_jsonl_dfa",
     "make_log_dfa",
     "make_simple_dfa",
+    "make_zone_dfa",
+    "FormatSpec",
+    "attach_oracle",
+    "available_formats",
+    "get_format",
+    "parser_config",
+    "register_format",
     "Column",
     "ParseResult",
     "Parser",

@@ -100,7 +100,37 @@ class Dfa:
         return self is other
 
     def validate_tables(self) -> None:
-        """Sanity-check table invariants (used by property tests)."""
+        """Check the well-formedness contract every registered format's DFA
+        must satisfy (used by the property tests and the format registry,
+        and run once per config by ``stages.plan_parse``):
+
+          * emission/transition tables are shape-consistent and in range;
+          * every byte maps to a group (the 256-entry LUT is total);
+          * each distinguished byte owns exactly one group — the kernels'
+            compare-based group matching (``_group_select``) requires it —
+            and the catch-all group is the last, byte-less group;
+          * the PAD group is inert: it never changes state and always
+            emits CONTROL, in *every* state;
+          * ``group_bytes[0]`` is a record delimiter somewhere (it is the
+            byte ``ParserConfig.record_delim_byte``, which ``prepare`` and
+            the streaming flush append to close the final record);
+          * the invalid state, if any, is an absorbing CONTROL sink.
+        """
+        assert self.emission.max() <= CONTROL
+        assert self.accept.shape == (self.n_states,)
+        assert int(self.group_of.max()) < self.n_groups
+        # one distinguished byte per group; catch-all last, with no byte
+        assert len(self.group_bytes) == self.n_groups - 1
+        assert len(set(self.group_bytes)) == len(self.group_bytes)
+        for g, b in enumerate(self.group_bytes):
+            assert int(self.group_of[b]) == g, (g, b)
+        # PAD is inert and CONTROL in every state
+        g_pad = int(self.group_of[PAD_BYTE])
+        assert self.group_bytes[g_pad] == PAD_BYTE
+        assert (self.transition[:, g_pad] == np.arange(self.n_states)).all()
+        assert (self.emission[:, g_pad] == CONTROL).all()
+        # group 0 is the record-delimiter byte
+        assert (self.emission[:, 0] == RECORD_DELIM).any()
         s_inv = self.invalid_state
         if s_inv is not None:
             # The invalid state is a sink.
@@ -325,4 +355,243 @@ def make_log_dfa(name: str = "clf") -> Dfa:
         accept=accept,
         invalid_state=None,
         state_names=("EOR", "FLD", "EOF", "QUO", "BRK"),
+    )
+
+
+def make_jsonl_dfa(max_depth: int = 4, name: str = "jsonl") -> Dfa:
+    """JSON-Lines DFA: one top-level object per line (ROADMAP item 4).
+
+    Nesting-depth tagging on the shared FSM engine: the depth-1 ``,`` and
+    ``:`` of the record object emit FIELD_DELIM — an object's fields land in
+    alternating key/value columns — while everything inside a nested
+    container stays DATA, so a nested value is its *raw JSON subtext* in the
+    CSS.  A plain DFA cannot count unbounded depth; nesting is bounded by
+    ``max_depth`` with one (container, string, escape) state triple per
+    depth level, and deeper input falls into the INV sink.
+
+    Dialect notes (the shipped oracle in ``tests/oracles/jsonl.py`` mirrors
+    these exactly):
+
+      * Depth-1 string quotes are CONTROL (keys and string values appear
+        unquoted in the CSS, like CSV's unquoting); escape sequences are
+        kept RAW — ``\\"`` does not close the string, but no unescaping
+        happens, the CSS carries the bytes verbatim.
+      * Depth-1 spaces outside strings are CONTROL, so ``"a": 1`` feeds the
+        int parser a clean ``1``.
+      * Nested braces/brackets are not matched by type (``{`` closed by
+        ``]`` is accepted) — depth is what the automaton tracks.
+      * Raw newlines are only legal between records (inside a string or a
+        nested value they are invalid JSON), so the record delimiter needs
+        no quote context and blank lines produce no records.
+      * Top-level non-object values and stray structural bytes hit INV; the
+        parser's validation flags the partition.
+    """
+    assert max_depth >= 2, "max_depth < 2 cannot hold a nested value"
+    state_names = ["EOR", "OBJ", "STR", "ESC", "DONE", "INV"]
+    EOR, OBJ, STR, ESC, DONE, INV = range(6)
+    NEST, NSTR, NESC = {}, {}, {}
+    for d in range(2, max_depth + 1):
+        NEST[d] = len(state_names); state_names.append(f"NEST{d}")
+        NSTR[d] = len(state_names); state_names.append(f"NSTR{d}")
+        NESC[d] = len(state_names); state_names.append(f"NESC{d}")
+    n_states = len(state_names)
+
+    group_bytes = [0x0A, ord('"'), ord("\\"), ord(","), ord(":"), ord("{"),
+                   ord("}"), ord("["), ord("]"), ord(" "), PAD_BYTE]
+    (G_REC, G_QUO, G_ESC, G_COM, G_COL, G_LB, G_RB,
+     G_LS, G_RS, G_SP, G_PAD) = range(11)
+    G_ANY = 11
+    n_groups = 12
+
+    # Unlisted (state, group) pairs are invalid JSON-Lines: default to the
+    # absorbing sink, emitting CONTROL.
+    T = np.full((n_states, n_groups), INV, np.uint8)
+    E = np.full((n_states, n_groups), CONTROL, np.uint8)
+
+    def rule(state, group, new_state, sym_class):
+        T[state, group] = new_state
+        E[state, group] = sym_class
+
+    # Between records: blank lines and leading spaces produce nothing.
+    rule(EOR, G_REC, EOR, CONTROL)
+    rule(EOR, G_SP, EOR, CONTROL)
+    rule(EOR, G_LB, OBJ, CONTROL)   # record opens with '{'
+
+    # Depth 1, outside strings: the tagging level.
+    rule(OBJ, G_QUO, STR, CONTROL)
+    rule(OBJ, G_COM, OBJ, FIELD_DELIM)
+    rule(OBJ, G_COL, OBJ, FIELD_DELIM)
+    rule(OBJ, G_SP, OBJ, CONTROL)
+    rule(OBJ, G_LB, NEST[2], DATA)  # nested value opens: raw subtext begins
+    rule(OBJ, G_LS, NEST[2], DATA)
+    rule(OBJ, G_RB, DONE, CONTROL)  # record object closes
+    rule(OBJ, G_ANY, OBJ, DATA)     # unquoted token: numbers, true/false/null
+
+    # Depth-1 strings: quotes dropped, escapes raw.
+    rule(STR, G_QUO, OBJ, CONTROL)
+    rule(STR, G_ESC, ESC, DATA)
+    for g in (G_COM, G_COL, G_LB, G_RB, G_LS, G_RS, G_SP, G_ANY):
+        rule(STR, g, STR, DATA)
+    for g in (G_QUO, G_ESC, G_COM, G_COL, G_LB, G_RB, G_LS, G_RS, G_SP, G_ANY):
+        rule(ESC, g, STR, DATA)
+
+    # After the record's closing brace: only trailing spaces, then newline.
+    rule(DONE, G_REC, EOR, RECORD_DELIM)
+    rule(DONE, G_SP, DONE, CONTROL)
+
+    # Nested containers, one state triple per depth.
+    for d in range(2, max_depth + 1):
+        dn, ds, de = NEST[d], NSTR[d], NESC[d]
+        deeper = NEST.get(d + 1, INV)       # beyond max_depth: sink
+        deeper_cls = DATA if d < max_depth else CONTROL
+        shallower = NEST.get(d - 1, OBJ)
+        for g in (G_LB, G_LS):
+            rule(dn, g, deeper, deeper_cls)
+        for g in (G_RB, G_RS):
+            rule(dn, g, shallower, DATA)
+        rule(dn, G_QUO, ds, DATA)           # nested quotes are raw subtext
+        for g in (G_COM, G_COL, G_SP, G_ANY):
+            rule(dn, g, dn, DATA)
+        rule(ds, G_QUO, dn, DATA)
+        rule(ds, G_ESC, de, DATA)
+        for g in (G_COM, G_COL, G_LB, G_RB, G_LS, G_RS, G_SP, G_ANY):
+            rule(ds, g, ds, DATA)
+        for g in (G_QUO, G_ESC, G_COM, G_COL, G_LB, G_RB, G_LS, G_RS, G_SP,
+                  G_ANY):
+            rule(de, g, ds, DATA)
+
+    for g in range(n_groups):
+        rule(INV, g, INV, CONTROL)
+    for s in range(n_states):
+        rule(s, G_PAD, s, CONTROL)
+
+    accept = np.zeros(n_states, bool)
+    accept[EOR] = True
+    return Dfa(
+        name=name,
+        transition=T,
+        emission=E,
+        group_of=_lut({b: g for g, b in enumerate(group_bytes)}, n_groups, G_ANY),
+        group_bytes=tuple(group_bytes),
+        start_state=EOR,
+        accept=accept,
+        invalid_state=INV,
+        state_names=tuple(state_names),
+    )
+
+
+def make_zone_dfa(name: str = "zone") -> Dfa:
+    """DNS-zone-file DFA: whitespace-delimited resource records with ``;``
+    line comments and parenthesized multi-line records ("Parsing Millions
+    of DNS Records per Second", PAPERS.md; ROADMAP item 4).
+
+    Whitespace-run collapsing is solved *inside* the automaton: only the
+    first space/tab after field content emits FIELD_DELIM; further
+    whitespace (and leading whitespace) is CONTROL, so consecutive spaces
+    never mint empty fields.  ``(`` switches newline's meaning — inside
+    parens it behaves like whitespace, so one record spans lines and the
+    streaming carry machinery handles it exactly like a quoted CSV newline.
+
+    Dialect notes (mirrored by ``tests/oracles/zone.py``):
+
+      * Blank lines and full-line comments produce no records; a comment
+        after record content is swallowed, and its newline ends the record.
+      * A comment inside parens runs to its newline; the record continues
+        on the next line.  A ``;`` directly after in-paren field content
+        emits FIELD_DELIM (top level needs none — the record delimiter that
+        follows closes the field).
+      * Nested ``(`` and stray ``)`` are plain data; no paren matching.
+      * A record *ending* in ``)`` carries one trailing empty field (the
+        whitespace before ``)`` already delimited), like CSV's ``a,b,`` —
+        the schema's n_cols clamp drops it.
+    """
+    EOR, FLD, EOF, CMT, CM0, POF, PFD, PCM = range(8)
+    state_names = ("EOR", "FLD", "EOF", "CMT", "CM0", "POF", "PFD", "PCM")
+    n_states = 8
+    group_bytes = [0x0A, ord(" "), 0x09, ord(";"), ord("("), ord(")"),
+                   PAD_BYTE]
+    G_REC, G_SP, G_TAB, G_SEM, G_LP, G_RP, G_PAD = range(7)
+    G_ANY = 7
+    n_groups = 8
+
+    T = np.zeros((n_states, n_groups), np.uint8)
+    E = np.zeros((n_states, n_groups), np.uint8)
+
+    def rule(state, group, new_state, sym_class):
+        T[state, group] = new_state
+        E[state, group] = sym_class
+
+    # EOR: start of line, no record content yet.
+    rule(EOR, G_REC, EOR, CONTROL)      # blank line: no record
+    for g in (G_SP, G_TAB):
+        rule(EOR, g, EOR, CONTROL)      # leading whitespace skipped
+    rule(EOR, G_SEM, CM0, CONTROL)      # full-line comment: no record
+    rule(EOR, G_LP, POF, CONTROL)
+    rule(EOR, G_RP, FLD, DATA)          # stray ')' is data
+    rule(EOR, G_ANY, FLD, DATA)
+
+    # FLD: inside a field at top level.
+    rule(FLD, G_REC, EOR, RECORD_DELIM)
+    for g in (G_SP, G_TAB):
+        rule(FLD, g, EOF, FIELD_DELIM)  # first whitespace ends the field
+    rule(FLD, G_SEM, CMT, CONTROL)      # comment; record delim follows later
+    rule(FLD, G_LP, POF, FIELD_DELIM)   # '(' right after content delimits
+    rule(FLD, G_RP, FLD, DATA)
+    rule(FLD, G_ANY, FLD, DATA)
+
+    # EOF: after a field delimiter (whitespace run continues).
+    rule(EOF, G_REC, EOR, RECORD_DELIM)
+    for g in (G_SP, G_TAB):
+        rule(EOF, g, EOF, CONTROL)      # collapse the run: no empty fields
+    rule(EOF, G_SEM, CMT, CONTROL)
+    rule(EOF, G_LP, POF, CONTROL)
+    rule(EOF, G_RP, FLD, DATA)
+    rule(EOF, G_ANY, FLD, DATA)
+
+    # CMT: comment after record content — its newline ends the record.
+    for g in range(n_groups):
+        rule(CMT, g, CMT, CONTROL)
+    rule(CMT, G_REC, EOR, RECORD_DELIM)
+
+    # CM0: comment on a contentless line — its newline emits nothing.
+    for g in range(n_groups):
+        rule(CM0, g, CM0, CONTROL)
+    rule(CM0, G_REC, EOR, CONTROL)
+
+    # POF: inside parens, whitespace context (newline = whitespace).
+    for g in (G_REC, G_SP, G_TAB):
+        rule(POF, g, POF, CONTROL)
+    rule(POF, G_SEM, PCM, CONTROL)
+    rule(POF, G_LP, PFD, DATA)          # nested '(' is plain data
+    rule(POF, G_RP, EOF, CONTROL)       # close paren, back to top level
+    rule(POF, G_ANY, PFD, DATA)
+
+    # PFD: inside parens, inside a field.
+    for g in (G_REC, G_SP, G_TAB):
+        rule(PFD, g, POF, FIELD_DELIM)
+    rule(PFD, G_SEM, PCM, FIELD_DELIM)  # field ends before the comment
+    rule(PFD, G_LP, PFD, DATA)
+    rule(PFD, G_RP, EOF, FIELD_DELIM)
+    rule(PFD, G_ANY, PFD, DATA)
+
+    # PCM: comment inside parens — its newline resumes the record.
+    for g in range(n_groups):
+        rule(PCM, g, PCM, CONTROL)
+    rule(PCM, G_REC, POF, CONTROL)
+
+    for s in range(n_states):
+        rule(s, G_PAD, s, CONTROL)
+
+    accept = np.zeros(n_states, bool)
+    accept[EOR] = True
+    return Dfa(
+        name=name,
+        transition=T,
+        emission=E,
+        group_of=_lut({b: g for g, b in enumerate(group_bytes)}, n_groups, G_ANY),
+        group_bytes=tuple(group_bytes),
+        start_state=EOR,
+        accept=accept,
+        invalid_state=None,
+        state_names=state_names,
     )

@@ -1,0 +1,177 @@
+"""Format registry: named formats on the shared FSM engine (ROADMAP item 4).
+
+The paper's core claim is that the parsing engine is *format-agnostic*: a
+new delimiter-separated format is a new transition/emission table, not new
+code.  This module is where that claim is cashed in — a registry mapping a
+format name to its :class:`FormatSpec`:
+
+  * a DFA factory (``make_csv_dfa`` / ``make_jsonl_dfa`` / ``make_zone_dfa``
+    / ``make_log_dfa`` / …) whose tables drive every backend unchanged,
+  * the default tagging mode and the tagging modes the format supports,
+  * a canonical demo/test :class:`~repro.core.parser.Schema`,
+  * an *oracle slot*: a pure-Python sequential parser of the same dialect,
+    attached by the test suite (``tests/oracles/``) via :func:`attach_oracle`
+    so conformance/fuzz/golden suites can check every backend bit-for-bit
+    against it.  Core ships the slot empty — oracles are test fixtures, not
+    runtime dependencies.
+
+Every registered DFA passes ``Dfa.validate_tables`` at registration time,
+so a malformed table fails here, not inside a traced kernel.
+
+Adding a format (see docs/ARCHITECTURE.md §Format registry):
+
+    >>> from repro.core import formats
+    >>> formats.register_format(formats.FormatSpec(
+    ...     name="tsv2", make_dfa=lambda: make_csv_dfa(delimiter=b"\\t"),
+    ...     default_schema=Schema.of(("a", "str"), ("b", "str"))))
+    >>> parser = Parser(formats.parser_config("tsv2", max_records=64))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.dfa import (
+    Dfa,
+    make_csv_dfa,
+    make_jsonl_dfa,
+    make_log_dfa,
+    make_simple_dfa,
+    make_zone_dfa,
+)
+from repro.core.parser import ParserConfig, Schema
+from repro.core.tagging import TAGGING_MODES
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """One registered format: ``(Dfa, tagging mode, oracle)`` plus metadata.
+
+    ``make_dfa`` is a factory (not a table instance) so every caller gets
+    fresh tables — :class:`Dfa` hashes by identity, and sharing one mutable
+    numpy-backed instance across tenants would couple their jit caches.
+    ``oracle`` is ``None`` in core; the test suite attaches the pure-Python
+    sequential reference parser (``tests/oracles/``) whose output every
+    backend must reproduce bit-for-bit.
+    """
+
+    name: str
+    make_dfa: Callable[[], Dfa]
+    default_schema: Schema
+    tagging: str = "tagged"
+    tagging_modes: Tuple[str, ...] = TAGGING_MODES
+    doc: str = ""
+    oracle: Optional[Callable] = None
+
+    def dfa(self) -> Dfa:
+        return self.make_dfa()
+
+
+_REGISTRY: Dict[str, FormatSpec] = {}
+
+
+def register_format(spec: FormatSpec, overwrite: bool = False) -> FormatSpec:
+    """Register ``spec`` under ``spec.name``; validates the DFA tables."""
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"format {spec.name!r} already registered")
+    if spec.tagging not in spec.tagging_modes:
+        raise ValueError(
+            f"default tagging {spec.tagging!r} not in {spec.tagging_modes}")
+    unknown = set(spec.tagging_modes) - set(TAGGING_MODES)
+    if unknown:
+        raise ValueError(f"unknown tagging modes {sorted(unknown)}")
+    spec.dfa().validate_tables()
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_format(name: str) -> FormatSpec:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown format {name!r}; registered: {available_formats()}")
+    return _REGISTRY[name]
+
+
+def available_formats() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def attach_oracle(name: str, oracle: Callable) -> FormatSpec:
+    """Fill a registered format's oracle slot (test-suite hook)."""
+    spec = dataclasses.replace(get_format(name), oracle=oracle)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def parser_config(name: str, schema: Optional[Schema] = None,
+                  max_records: int = 1 << 10, **overrides) -> ParserConfig:
+    """Build a :class:`ParserConfig` for a registered format.
+
+    The format supplies the DFA and default tagging mode; ``schema``
+    defaults to the spec's canonical schema.  Any :class:`ParserConfig`
+    knob (backend, chunk_size, fuse_pipeline, …) passes through.
+    """
+    spec = get_format(name)
+    overrides.setdefault("tagging", spec.tagging)
+    if overrides["tagging"] not in spec.tagging_modes:
+        raise ValueError(
+            f"format {name!r} does not support tagging "
+            f"{overrides['tagging']!r} (supported: {spec.tagging_modes})")
+    return ParserConfig(
+        dfa=spec.dfa(),
+        schema=schema if schema is not None else spec.default_schema,
+        max_records=max_records,
+        **overrides,
+    )
+
+
+# ---------------------------------------------------------------------------
+# built-in formats
+# ---------------------------------------------------------------------------
+
+_MIXED = Schema.of(("i", "int32"), ("s", "str"), ("f", "float32"),
+                   ("d", "date"))
+
+register_format(FormatSpec(
+    name="csv", make_dfa=make_csv_dfa, default_schema=_MIXED,
+    doc="RFC 4180 CSV: quoted fields, doubled-quote escapes, CRLF."))
+
+register_format(FormatSpec(
+    name="csv+comment",
+    make_dfa=lambda: make_csv_dfa(comment=b"#"),
+    default_schema=_MIXED,
+    doc="CSV with '#' line comments (comment lines produce no records)."))
+
+register_format(FormatSpec(
+    name="tsv",
+    make_dfa=lambda: make_csv_dfa(delimiter=b"\t", name="tsv"),
+    default_schema=_MIXED,
+    doc="Tab-separated values under the CSV quoting rules."))
+
+register_format(FormatSpec(
+    name="simple", make_dfa=make_simple_dfa,
+    default_schema=Schema.of(("a", "int32"), ("b", "float32")),
+    doc="Quote-free delimited baseline (paper §2's constrained format)."))
+
+register_format(FormatSpec(
+    name="clf", make_dfa=make_log_dfa,
+    default_schema=Schema.of(("host", "str"), ("ts", "str"),
+                             ("req", "str"), ("code", "int32")),
+    doc="Common-Log-Format-style: space-delimited with [...] and \"...\" "
+        "enclosing scopes."))
+
+register_format(FormatSpec(
+    name="jsonl", make_dfa=make_jsonl_dfa,
+    default_schema=Schema.of(("k0", "str"), ("id", "int32"),
+                             ("k1", "str"), ("name", "str"),
+                             ("k2", "str"), ("score", "float32")),
+    doc="JSON Lines (one object per line): depth-1 ','/':' delimit "
+        "alternating key/value columns; nested values stay raw subtext."))
+
+register_format(FormatSpec(
+    name="zone", make_dfa=make_zone_dfa,
+    default_schema=Schema.of(("name", "str"), ("ttl", "int32"),
+                             ("class", "str"), ("type", "str"),
+                             ("data", "str")),
+    doc="DNS zone file: whitespace-delimited RRs, ';' comments, "
+        "parenthesized multi-line records; TTL feeds int typeconv."))

@@ -266,6 +266,12 @@ def plan_parse(cfg, backend: ParseBackend, *, convert: bool = True) -> ParsePlan
     produces typed columns, which ``convert=False`` drivers must not pay
     for), stay staged.
     """
+    # Fail fast on malformed DFA tables (a hand-rolled or third-party
+    # format whose groups/PAD/record-delimiter contract is broken would
+    # otherwise surface as wrong parses deep inside a traced kernel).
+    # Registered formats (core/formats.py) were validated at registration;
+    # this covers configs built around ad-hoc Dfa instances too.
+    cfg.dfa.validate_tables()
     path, reason = "staged", "fuse_pipeline not requested"
     if getattr(cfg, "fuse_pipeline", False):
         if backend.execute is None:

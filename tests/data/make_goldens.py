@@ -1,10 +1,12 @@
 """Golden-corpus definitions + generator for tests/test_golden_corpus.py.
 
-Each corpus entry is a hand-written CSV under ``tests/data/`` plus a ``.npz``
-of the reference backend's exact columnar outputs (values, ``valid``/
-``empty`` masks, CSS, field index, record count).  The goldens pin the
-parser's observable §3.3 behaviour so refactors that silently change
-conversions — either backend — fail the regression test.
+Each corpus entry is a hand-written fixture under ``tests/data/`` — a CSV,
+JSON-Lines, DNS-zone or CLF file — plus a ``.npz`` of the reference
+backend's exact columnar outputs (values, ``valid``/``empty`` masks, CSS,
+field index, record count).  The goldens pin the parser's observable §3.3
+behaviour *per registered format* so refactors that silently change
+conversions or a dialect's delimiting — either backend — fail the
+regression test.
 
 Regenerate (only when a semantic change is *intended*):
 
@@ -16,9 +18,19 @@ import pathlib
 
 import numpy as np
 
-from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core import Parser, Schema, formats
 
 DATA_DIR = pathlib.Path(__file__).resolve().parent
+
+# corpus name -> (format registry name, fixture file)
+GOLDEN_FORMATS = {
+    "mixed_basic": ("csv", "mixed_basic.csv"),
+    "numeric_edges": ("csv", "numeric_edges.csv"),
+    "date_edges": ("csv", "date_edges.csv"),
+    "jsonl_basic": ("jsonl", "jsonl_basic.jsonl"),
+    "zone_basic": ("zone", "zone_basic.zone"),
+    "clf_basic": ("clf", "clf_basic.log"),
+}
 
 GOLDEN_SCHEMAS = {
     "mixed_basic": Schema.of(("i", "int32"), ("s", "str"),
@@ -26,6 +38,10 @@ GOLDEN_SCHEMAS = {
     "numeric_edges": Schema.of(("a", "int32"), ("b", "int32"),
                                ("x", "float32"), ("y", "float32")),
     "date_edges": Schema.of(("d1", "date"), ("d2", "date"), ("note", "str")),
+    # format-native corpora pin the registry's canonical schemas
+    "jsonl_basic": formats.get_format("jsonl").default_schema,
+    "zone_basic": formats.get_format("zone").default_schema,
+    "clf_basic": formats.get_format("clf").default_schema,
 }
 
 
@@ -34,8 +50,9 @@ def build_parser(name: str, backend: str = "reference") -> Parser:
     # backend with the whole-pipeline megakernel (fuse_pipeline=True).
     fused = backend == "pallas-fused"
     be = "pallas" if fused else backend
-    return Parser(ParserConfig(
-        dfa=make_csv_dfa(), schema=GOLDEN_SCHEMAS[name],
+    fmt, _ = GOLDEN_FORMATS[name]
+    return Parser(formats.parser_config(
+        fmt, schema=GOLDEN_SCHEMAS[name],
         max_records=32, chunk_size=64, backend=be, fuse_pipeline=fused,
         # pin the radix partition kernel on pallas so golden regressions
         # cover the kernel path (interpret-mode "auto" picks the jnp pass)
@@ -45,7 +62,8 @@ def build_parser(name: str, backend: str = "reference") -> Parser:
 
 def golden_arrays(name: str, backend: str = "reference"):
     p = build_parser(name, backend)
-    res = p.parse((DATA_DIR / f"{name}.csv").read_bytes())
+    _, fixture = GOLDEN_FORMATS[name]
+    res = p.parse((DATA_DIR / fixture).read_bytes())
     out = {
         "css": np.asarray(res.css),
         "col_start": np.asarray(res.col_start),

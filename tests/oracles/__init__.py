@@ -1,0 +1,36 @@
+"""Pure-Python sequential oracles, one per registered format.
+
+Each oracle is an independent character-level parser of the format's
+*documented dialect* (the semantics written on the ``make_*_dfa``
+docstrings in ``src/repro/core/dfa.py``) — a sequential mirror of what the
+massively parallel engine must produce, written without the DFA tables so
+the comparison is not circular.
+
+Contract: ``parse(data: bytes) -> list[list[bytes]]`` — the complete
+records (each a list of field byte-strings) that ``Parser.parse(data)``
+reports, including the parser's trailing-record-delimiter append and the
+format's unquoting/field-collapsing rules.  Oracles raise ``ValueError``
+on input that would hit a DFA's invalid sink — test generators only ever
+produce well-formed input.
+
+Importing this package attaches every oracle to the core format registry
+(``repro.core.formats.attach_oracle``), filling the registry's oracle slot
+so ``tests/test_format_conformance.py`` can sweep every registered format
+generically.
+"""
+from repro.core import formats as formats_mod
+
+from tests.oracles import clf, csvlike, jsonl, simple, zone
+
+ORACLES = {
+    "csv": csvlike.parse,
+    "csv+comment": lambda data: csvlike.parse(data, comment=b"#"),
+    "tsv": lambda data: csvlike.parse(data, delimiter=b"\t"),
+    "simple": simple.parse,
+    "clf": clf.parse,
+    "jsonl": jsonl.parse,
+    "zone": zone.parse,
+}
+
+for _name, _fn in ORACLES.items():
+    formats_mod.attach_oracle(_name, _fn)

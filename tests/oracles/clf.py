@@ -1,0 +1,54 @@
+"""Sequential oracle for ``make_log_dfa`` (Common-Log-Format-style).
+
+Space-delimited fields with two independent enclosing scopes: ``[...]``
+and ``"..."``.  Inside either scope spaces and newlines are field data;
+the open/close bytes themselves are dropped (CONTROL).  Quirks mirrored
+from the DFA tables: a stray ``]`` outside brackets is plain data, a ``"``
+inside ``[...]`` is dropped without leaving the bracket scope, closing a
+scope returns to the *same* field (``a[b]c`` is one field ``abc``), every
+space delimits (runs mint empty fields) and a blank line is a record with
+one empty field.
+"""
+from __future__ import annotations
+
+from typing import List
+
+LF, SP = 0x0A, 0x20
+QUOTE, LB, RB = ord('"'), ord("["), ord("]")
+
+
+def parse(data: bytes) -> List[List[bytes]]:
+    if not data or data[-1] != LF:
+        data += b"\n"
+
+    records: List[List[bytes]] = []
+    fields: List[bytes] = []
+    cur = bytearray()
+    state = "TOP"  # EOR/FLD/EOF share one behaviour in this dialect
+
+    for b in data:
+        if state == "TOP":
+            if b == LF:
+                fields.append(bytes(cur)); cur.clear()
+                records.append(fields); fields = []
+            elif b == SP:
+                fields.append(bytes(cur)); cur.clear()
+            elif b == QUOTE:
+                state = "QUO"
+            elif b == LB:
+                state = "BRK"
+            else:
+                cur.append(b)  # stray ']' included: plain data
+        elif state == "QUO":
+            if b == QUOTE:
+                state = "TOP"
+            else:
+                cur.append(b)  # newlines, spaces, brackets: data
+        else:  # BRK
+            if b == RB:
+                state = "TOP"
+            elif b == QUOTE:
+                pass  # '"' inside [...]: dropped, scope continues
+            else:
+                cur.append(b)
+    return records

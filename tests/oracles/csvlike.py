@@ -1,0 +1,95 @@
+"""Sequential oracle for the RFC 4180 CSV dialect of ``make_csv_dfa``.
+
+Covers the plain, comment-enabled and alternate-delimiter (TSV) variants.
+Semantics mirrored: quote enclosure (delimiters/newlines inside quotes are
+data), doubled-quote unescaping, CR as structural outside quotes and data
+inside, ``#`` opening a comment only at start-of-record (comment lines
+produce no records), and the parser's trailing-newline append.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+LF, CR = 0x0A, 0x0D
+
+
+def parse(data: bytes, delimiter: bytes = b",", quote: bytes = b'"',
+          comment: Optional[bytes] = None,
+          handle_cr: bool = True) -> List[List[bytes]]:
+    d, q = delimiter[0], quote[0]
+    c = comment[0] if comment is not None else None
+    if not data or data[-1] != LF:
+        data += b"\n"
+
+    records: List[List[bytes]] = []
+    fields: List[bytes] = []
+    cur = bytearray()
+    state = "EOR"
+
+    def end_field():
+        fields.append(bytes(cur))
+        cur.clear()
+
+    def end_record():
+        nonlocal fields
+        fields.append(bytes(cur))
+        cur.clear()
+        records.append(fields)
+        fields = []
+
+    for b in data:
+        if state == "EOR":
+            if b == LF:
+                end_record()
+            elif b == q:
+                state = "ENC"
+            elif b == d:
+                end_field(); state = "EOF"
+            elif c is not None and b == c:
+                state = "CMT"
+            elif handle_cr and b == CR:
+                pass
+            else:
+                cur.append(b); state = "FLD"
+        elif state == "ENC":
+            if b == q:
+                state = "ESC"
+            else:
+                cur.append(b)  # delimiters, newlines, CR: data inside quotes
+        elif state == "ESC":
+            if b == q:
+                cur.append(q); state = "ENC"  # doubled quote -> one literal
+            elif b == LF:
+                end_record(); state = "EOR"
+            elif b == d:
+                end_field(); state = "EOF"
+            elif handle_cr and b == CR:
+                pass
+            else:
+                raise ValueError(f"junk byte {b:#x} after closing quote")
+        elif state == "FLD":
+            if b == LF:
+                end_record(); state = "EOR"
+            elif b == d:
+                end_field(); state = "EOF"
+            elif b == q:
+                raise ValueError("quote inside unquoted field")
+            elif handle_cr and b == CR:
+                pass
+            else:
+                cur.append(b)  # '#' mid-record is plain data
+        elif state == "EOF":
+            if b == LF:
+                end_record(); state = "EOR"
+            elif b == q:
+                state = "ENC"
+            elif b == d:
+                end_field()
+            elif handle_cr and b == CR:
+                pass
+            else:
+                cur.append(b); state = "FLD"  # '#' after a delim is data too
+        else:  # CMT: swallow to newline; comment lines emit no record
+            if b == LF:
+                state = "EOR"
+    return records

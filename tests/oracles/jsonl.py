@@ -1,0 +1,125 @@
+"""Sequential oracle for ``make_jsonl_dfa`` (JSON Lines).
+
+One top-level object per line.  Depth-1 ``,`` and ``:`` delimit fields
+(alternating key/value columns); depth-1 string quotes and spaces are
+dropped; escapes are kept raw (``\\"`` does not close a string but no
+unescaping happens).  A nested container is one field holding its raw
+JSON subtext, brackets included, up to ``max_depth``.  Blank lines
+produce no records.  Raises ``ValueError`` exactly where the DFA falls
+into its INV sink: newline inside a string or nested value, stray ``\\``
+or ``]`` at depth 1, nesting beyond ``max_depth``, junk after the
+record's closing ``}``, a record not opening with ``{``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+LF, SP = 0x0A, 0x20
+QUOTE, BSLASH = ord('"'), ord("\\")
+COMMA, COLON = ord(","), ord(":")
+LBRACE, RBRACE, LBRACK, RBRACK = ord("{"), ord("}"), ord("["), ord("]")
+
+
+def parse(data: bytes, max_depth: int = 4) -> List[List[bytes]]:
+    if not data or data[-1] != LF:
+        data += b"\n"
+
+    records: List[List[bytes]] = []
+    fields: List[bytes] = []
+    cur = bytearray()
+    state = "EOR"
+    depth = 0
+
+    def end_field():
+        fields.append(bytes(cur))
+        cur.clear()
+
+    def end_record():
+        nonlocal fields
+        end_field()
+        records.append(fields)
+        fields = []
+
+    for b in data:
+        if state == "EOR":
+            if b in (LF, SP):
+                pass  # blank lines / leading spaces: nothing
+            elif b == LBRACE:
+                state = "OBJ"
+            else:
+                raise ValueError("record must open with '{'")
+        elif state == "OBJ":  # depth 1, outside strings: the tagging level
+            if b == QUOTE:
+                state = "STR"
+            elif b in (COMMA, COLON):
+                end_field()
+            elif b == SP:
+                pass
+            elif b in (LBRACE, LBRACK):
+                depth = 2
+                cur.append(b)
+                state = "NEST"
+            elif b == RBRACE:
+                state = "DONE"
+            elif b in (LF, BSLASH, RBRACK):
+                raise ValueError("invalid byte at depth 1")
+            else:
+                cur.append(b)  # unquoted token: numbers, true/false/null
+        elif state == "STR":  # depth-1 string: quotes dropped, escapes raw
+            if b == QUOTE:
+                state = "OBJ"
+            elif b == BSLASH:
+                cur.append(b)
+                state = "ESC"
+            elif b == LF:
+                raise ValueError("newline inside string")
+            else:
+                cur.append(b)
+        elif state == "ESC":
+            if b == LF:
+                raise ValueError("newline inside escape")
+            cur.append(b)
+            state = "STR"
+        elif state == "DONE":  # record object closed; spaces then newline
+            if b == LF:
+                end_record()
+                state = "EOR"
+            elif b == SP:
+                pass
+            else:
+                raise ValueError("junk after closing '}'")
+        elif state == "NEST":  # nested container: raw subtext, brackets kept
+            if b in (LBRACE, LBRACK):
+                if depth >= max_depth:
+                    raise ValueError("nesting beyond max_depth")
+                depth += 1
+                cur.append(b)
+            elif b in (RBRACE, RBRACK):  # closers not matched by type
+                cur.append(b)
+                depth -= 1
+                if depth == 1:
+                    state = "OBJ"
+            elif b == QUOTE:
+                cur.append(b)
+                state = "NSTR"
+            elif b in (LF, BSLASH):
+                raise ValueError("invalid byte in nested value")
+            else:
+                cur.append(b)
+        elif state == "NSTR":  # nested string: quotes are raw subtext
+            if b == QUOTE:
+                cur.append(b)
+                state = "NEST"
+            elif b == BSLASH:
+                cur.append(b)
+                state = "NESC"
+            elif b == LF:
+                raise ValueError("newline inside nested string")
+            else:
+                cur.append(b)
+        else:  # NESC
+            if b == LF:
+                raise ValueError("newline inside nested escape")
+            cur.append(b)
+            state = "NSTR"
+    return records

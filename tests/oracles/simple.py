@@ -1,0 +1,18 @@
+"""Sequential oracle for ``make_simple_dfa`` (quote-free delimited).
+
+Every newline is a record delimiter and every delimiter byte a field
+delimiter — no quoting, no comments, so the oracle is a plain two-level
+split after mirroring the parser's trailing-newline append.  A blank line
+is a record with one empty field.
+"""
+from __future__ import annotations
+
+from typing import List
+
+LF = 0x0A
+
+
+def parse(data: bytes, delimiter: bytes = b",") -> List[List[bytes]]:
+    if not data or data[-1] != LF:
+        data += b"\n"
+    return [line.split(delimiter) for line in data.split(b"\n")[:-1]]

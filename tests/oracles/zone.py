@@ -1,0 +1,112 @@
+"""Sequential oracle for ``make_zone_dfa`` (DNS zone files).
+
+Whitespace-delimited resource records: only the first space/tab after
+field content delimits (runs collapse, leading whitespace is skipped, no
+empty fields are minted).  ``;`` opens a comment to end of line — on a
+contentless line the record is suppressed entirely; after content the
+comment's newline ends the record.  ``(`` turns newlines into whitespace
+until ``)`` so one record spans lines; a comment inside parens resumes
+the record on the next line, and a ``;`` or ``)`` directly after in-paren
+field content delimits that field.  Stray ``)`` at top level and nested
+``(`` are plain data.  A record ending in ``)`` carries one trailing
+empty field (the whitespace before ``)`` already delimited) — the
+schema's n_cols clamp drops it.
+"""
+from __future__ import annotations
+
+from typing import List
+
+LF, SP, TAB = 0x0A, 0x20, 0x09
+SEMI, LP, RP = ord(";"), ord("("), ord(")")
+
+
+def parse(data: bytes) -> List[List[bytes]]:
+    if not data or data[-1] != LF:
+        data += b"\n"
+
+    records: List[List[bytes]] = []
+    fields: List[bytes] = []
+    cur = bytearray()
+    state = "EOR"
+
+    def end_field():
+        fields.append(bytes(cur))
+        cur.clear()
+
+    def end_record():
+        nonlocal fields
+        end_field()
+        records.append(fields)
+        fields = []
+
+    for b in data:
+        if state == "EOR":  # start of line, no record content yet
+            if b in (LF, SP, TAB):
+                pass
+            elif b == SEMI:
+                state = "CM0"
+            elif b == LP:
+                state = "POF"
+            else:
+                cur.append(b)  # stray ')' included: plain data
+                state = "FLD"
+        elif state == "FLD":  # inside a top-level field
+            if b == LF:
+                end_record()
+                state = "EOR"
+            elif b in (SP, TAB):
+                end_field()
+                state = "EOF"
+            elif b == SEMI:
+                state = "CMT"  # field closed by the record delim to come
+            elif b == LP:
+                end_field()
+                state = "POF"
+            else:
+                cur.append(b)
+        elif state == "EOF":  # in a whitespace run after a delimiter
+            if b == LF:
+                end_record()
+                state = "EOR"
+            elif b in (SP, TAB):
+                pass  # run collapses: no empty fields
+            elif b == SEMI:
+                state = "CMT"
+            elif b == LP:
+                state = "POF"
+            else:
+                cur.append(b)
+                state = "FLD"
+        elif state == "CMT":  # comment after content: newline ends record
+            if b == LF:
+                end_record()
+                state = "EOR"
+        elif state == "CM0":  # comment on contentless line: no record
+            if b == LF:
+                state = "EOR"
+        elif state == "POF":  # inside parens, whitespace context
+            if b in (LF, SP, TAB):
+                pass
+            elif b == SEMI:
+                state = "PCM"
+            elif b == RP:
+                state = "EOF"
+            else:
+                cur.append(b)  # nested '(' included: plain data
+                state = "PFD"
+        elif state == "PFD":  # inside parens, inside a field
+            if b in (LF, SP, TAB):
+                end_field()
+                state = "POF"
+            elif b == SEMI:
+                end_field()
+                state = "PCM"
+            elif b == RP:
+                end_field()
+                state = "EOF"
+            else:
+                cur.append(b)
+        else:  # PCM: comment inside parens — record resumes next line
+            if b == LF:
+                state = "POF"
+    return records

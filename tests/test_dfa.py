@@ -3,19 +3,32 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without dev extras: table pins still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core import dfa as dfa_mod
+from repro.core import formats as formats_mod
 from repro.core.transition import sequential_reference, transition_pipeline
 
-ALL_DFAS = {
-    "csv": dfa_mod.make_csv_dfa(),
-    "csv+comment": dfa_mod.make_csv_dfa(comment=b"#"),
-    "tsv": dfa_mod.make_csv_dfa(delimiter=b"\t"),
-    "simple": dfa_mod.make_simple_dfa(),
-    "clf": dfa_mod.make_log_dfa(),
+# Registry-driven: every registered format's tables are covered here, so a
+# newly registered format inherits the invariant + equivalence sweeps.
+ALL_DFAS = {name: formats_mod.get_format(name).dfa()
+            for name in formats_mod.available_formats()}
+
+# One well-formed sample per format that must land back in an accept state
+# (the quote/bracket/paren/nesting scopes all round-trip closed).
+WELL_FORMED = {
+    "csv": b'1,"a,\nb",3\n',
+    "csv+comment": b"# c\n1,2\n",
+    "tsv": b'1\t"x\ty"\t2\n',
+    "simple": b"1,2\n",
+    "clf": b'h [10/Oct "x] "GET /a\nb" 200\n',
+    "jsonl": b'{"a": 1, "b": {"c": ["d\\"e", 2]}}\n',
+    "zone": b"a 3600 ( IN ;c\n A ) d\n",
 }
 
 
@@ -59,27 +72,30 @@ def test_parallel_matches_sequential(name, chunk):
     assert int(ends[-1]) == end_ref
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    data=st.binary(min_size=0, max_size=600),
-    chunk=st.sampled_from([5, 32, 64]),
-    name=st.sampled_from(list(ALL_DFAS)),
-)
-def test_property_parallel_matches_sequential(data, chunk, name):
-    """The parallel FSM simulation must equal the sequential one for ANY
-    byte string — including pathological quote/delimiter soup."""
-    d = ALL_DFAS[name]
-    # bias the alphabet towards structural characters
-    trans = bytes((b % 16) + ord("0") if b > 127 else b for b in data)
-    structural = b',"\n#x '
-    biased = bytes(
-        structural[b % len(structural)] if b % 3 == 0 else b for b in trans
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        data=st.binary(min_size=0, max_size=600),
+        chunk=st.sampled_from([5, 32, 64]),
+        name=st.sampled_from(list(ALL_DFAS)),
     )
-    chunks = _pad(biased, chunk, d.group_bytes[0])
-    cls_ref, _, end_ref = sequential_reference(chunks.reshape(-1), d)
-    classes, ends, _ = transition_pipeline(jnp.asarray(chunks), d)
-    np.testing.assert_array_equal(np.asarray(classes).reshape(-1), cls_ref)
-    assert int(ends[-1]) == end_ref
+    def test_property_parallel_matches_sequential(data, chunk, name):
+        """The parallel FSM simulation must equal the sequential one for ANY
+        byte string — including pathological quote/delimiter soup."""
+        d = ALL_DFAS[name]
+        # bias the alphabet towards structural characters (every format's:
+        # CSV quotes/comments, JSONL braces/colons/escapes, zone
+        # parens/semis, CLF brackets — soup for one dialect is soup for all)
+        trans = bytes((b % 16) + ord("0") if b > 127 else b for b in data)
+        structural = b',"\n#x {}[]:;()\\\t'
+        biased = bytes(
+            structural[b % len(structural)] if b % 3 == 0 else b for b in trans
+        )
+        chunks = _pad(biased, chunk, d.group_bytes[0])
+        cls_ref, _, end_ref = sequential_reference(chunks.reshape(-1), d)
+        classes, ends, _ = transition_pipeline(jnp.asarray(chunks), d)
+        np.testing.assert_array_equal(np.asarray(classes).reshape(-1), cls_ref)
+        assert int(ends[-1]) == end_ref
 
 
 def test_comment_lines_produce_no_records():
@@ -102,3 +118,66 @@ def test_quoted_delimiters_are_data():
     assert flat[4] == dfa_mod.DATA  # '\n'
     # the structural comma after the closing quote is a FIELD_DELIM
     assert flat[7] == dfa_mod.FIELD_DELIM
+
+
+@pytest.mark.parametrize("name", sorted(WELL_FORMED))
+def test_well_formed_sample_round_trips(name):
+    """A closed-scope sample must end in an accept state and delimit at
+    least one record (the streaming-carry precondition for every format)."""
+    d = ALL_DFAS[name]
+    raw = WELL_FORMED[name]
+    cls, states, end = sequential_reference(np.frombuffer(raw, np.uint8), d)
+    assert bool(d.accept[end]), d.state_names[end]
+    assert (cls == dfa_mod.RECORD_DELIM).sum() >= 1
+    if d.invalid_state is not None:  # well-formed input never hits the sink
+        assert (states != d.invalid_state).all()
+
+
+def _classes(name, raw):
+    d = ALL_DFAS[name]
+    cls, _, _ = sequential_reference(np.frombuffer(raw, np.uint8), d)
+    return cls
+
+
+def test_log_dfa_emission_semantics():
+    """First direct pin of make_log_dfa's dialect (it previously rode along
+    unregistered and untested): bracket/quote scopes, stray closers."""
+    C, D, F, R = (dfa_mod.CONTROL, dfa_mod.DATA, dfa_mod.FIELD_DELIM,
+                  dfa_mod.RECORD_DELIM)
+    #      a  [  b  "  c  SP ]  d  SP "  e  SP f  "  SP ]  \n
+    raw = b'a[b"c ]d "e f" ]\n'
+    want = [D, C, D, C, D, D, C, D, F, C, D, D, D, C, F, D, R]
+    assert list(_classes("clf", raw)) == want
+
+
+def test_jsonl_dfa_emission_semantics():
+    """Depth-1 ','/':' delimit; everything nested is raw DATA subtext."""
+    C, D, F, R = (dfa_mod.CONTROL, dfa_mod.DATA, dfa_mod.FIELD_DELIM,
+                  dfa_mod.RECORD_DELIM)
+    raw = b'{"a": {"b": [1, 2]}, "c": 3}\n'
+    cls = _classes("jsonl", raw)
+    assert cls[4] == F            # depth-1 ':'
+    assert cls[6] == D            # nested '{' begins raw subtext
+    assert cls[10] == D           # ':' inside nested container
+    assert cls[14] == D           # ',' inside nested container
+    assert cls[17] == D and cls[18] == D  # nested closers
+    assert cls[19] == F           # depth-1 ',' after the nested value
+    assert cls[24] == F           # depth-1 ':' before scalar value
+    assert cls[27] == C           # record's closing '}'
+    assert cls[28] == R           # newline between records
+    # blank lines produce no records
+    assert list(_classes("jsonl", b"\n\n")) == [C, C]
+
+
+def test_zone_dfa_emission_semantics():
+    """Whitespace-run collapse, paren newline-as-whitespace, comments."""
+    C, D, F, R = (dfa_mod.CONTROL, dfa_mod.DATA, dfa_mod.FIELD_DELIM,
+                  dfa_mod.RECORD_DELIM)
+    #      a  SP b  SP (  SP c  \n SP d  SP )  SP e  ;  f  \n
+    raw = b'a b ( c\n d ) e;f\n'
+    want = [D, F, D, F, C, C, D, F, C, D, F, C, C, D, C, C, R]
+    assert list(_classes("zone", raw)) == want
+    # a whitespace run emits exactly one FIELD_DELIM (no empty fields)
+    assert list(_classes("zone", b"a \t b\n")) == [D, F, C, C, D, R]
+    # full-line comments and blank lines emit no record delimiter
+    assert list(_classes("zone", b";x\n\n")) == [C, C, C, C]

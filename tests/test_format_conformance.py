@@ -1,0 +1,214 @@
+"""Format conformance: every registered format × every backend × every
+tagging mode × oneshot/streaming, bit-for-bit against its pure-Python
+oracle (the tentpole acceptance bar for the format registry).
+
+For each format in ``repro.core.formats`` the matrix is:
+
+  * backends — ``reference``, staged ``pallas``, and the whole-pipeline
+    megakernel (``pallas-fused``); pallas results must equal reference
+    bit-for-bit (``_assert_results_equal``: CSS, field index, values,
+    masks, validation),
+  * tagging — every mode the format's spec declares (tagged/inline/vector
+    for all built-ins),
+  * drivers — oneshot ``Parser.parse`` and multi-partition
+    ``StreamingParser`` with mid-record splits,
+
+and the reference output is checked field-by-field against the format's
+sequential oracle (``tests/oracles/``): record count, exact string bytes
+through the CSS, int/float/date validity+values, empty masks.
+
+The canonical inputs are small but adversarial per dialect: quoted
+delimiters and embedded newlines (csv/tsv), comment lines (csv+comment,
+zone), double-bracket scopes (clf), nested containers and raw escapes
+(jsonl), multi-line parenthesized records and whitespace-run collapsing
+(zone).  Deep random coverage lives in tests/test_fuzz_differential.py;
+this suite pins the *dialects*.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Parser, formats
+from repro.core.streaming import StreamingParser
+from tests import oracles  # noqa: F401 — import attaches oracles to the registry
+from tests.test_backend_parity import _assert_results_equal
+from tests.test_fuzz_differential import (
+    check_float_value,
+    oracle_date,
+    oracle_float_valid,
+    oracle_int,
+)
+
+BACKENDS = ("reference", "pallas", "pallas-fused")
+
+# One hand-written input per format, exercising that dialect's corners.
+# Every record carries exactly n_cols fields unless the dialect itself
+# mints extras (zone's paren trailing-empty — the schema clamp drops them).
+CANONICAL = {
+    "csv": (b'1,"a,b",3.5,2024-02-29\n'
+            b'-7,"he""llo",.25,2023-01-01 12:30:00\n'
+            b',wor#ld,1e3,not-a-date\n'
+            b'2147483648,"line\nbreak",+0.5,2024-12-31\n'),
+    "csv+comment": (b'# header comment\n'
+                    b'1,"a,b",3.5,2024-02-29\n'
+                    b'-7,x,.25,2023-01-01 12:30:00\n'
+                    b'# mid-table comment\n'
+                    b',world,1e3,not-a-date\n'),
+    "tsv": (b'1\t"a\tb"\t3.5\t2024-02-29\n'
+            b'-7\t"he""llo"\t.25\t2023-01-01 12:30:00\n'
+            b'\two,rld\t1e3\tnot-a-date\n'),
+    "simple": b'1,2.5\n-22,1e3\n,+.25\n9999999999,junk\n',
+    "clf": (b'h1 [01/Jan/2024 10:00:00] "GET /a b" 200\n'
+            b'h2.example [02/Feb "x] "POST /c\nd" -7\n'
+            b'h3 [t] "r" 404\n'),
+    "jsonl": (b'{"id": 7, "name": "alpha", "score": 1.5}\n'
+              b'{"id": -3, "name": "a,b:c", "score": 2e3}\n'
+              b'\n'
+              b'{"id": 007, "name": {"nested": [1, 2]}, "score": .5}\n'
+              b'{"id": 2147483648, "name": "es\\"c", "score": x}\n'),
+    "zone": (b'example.com 3600 IN A 1.2.3.4\n'
+             b'www\t600\tIN\tCNAME\texample.com; trailing comment\n'
+             b'; full-line comment\n'
+             b'\n'
+             b'sub 7200 ( IN\n   TXT ) hello\n'
+             b'par 100 IN TXT ( d1 d2 )\n'
+             b'host 99x IN A 5.6.7.8\n'),
+}
+
+_CACHE = {}
+
+
+def parser_for(name, backend, tagging):
+    key = (name, backend, tagging)
+    if key not in _CACHE:
+        fused = backend == "pallas-fused"
+        be = "pallas" if fused else backend
+        _CACHE[key] = Parser(formats.parser_config(
+            name, max_records=64, chunk_size=32, backend=be, tagging=tagging,
+            fuse_pipeline=fused,
+            # pin the radix partition kernel on pallas so conformance covers
+            # the kernel path (interpret-mode "auto" picks the jnp pass)
+            partition_impl="kernel" if be == "pallas" else "auto"))
+        if fused:
+            assert _CACHE[key].plan.execute_path == "fused"
+    return _CACHE[key]
+
+
+def _check_against_oracle(res, parser, records):
+    """Reference output vs the oracle's list-of-records-of-field-bytes."""
+    schema = parser.cfg.schema
+    assert int(res.validation.n_records) == len(records)
+    assert bool(res.validation.ok)
+    arrow = parser.to_arrow(res)
+    for c, col in enumerate(schema.columns):
+        parsed = res.values[col.name]
+        valid = np.asarray(parsed.valid)
+        empty = np.asarray(parsed.empty)
+        values = np.asarray(parsed.value)
+        a = arrow[col.name]
+        for r, row in enumerate(records):
+            # oracle fields beyond n_cols are the schema clamp's discard
+            field = row[c] if c < len(row) else b""
+            s = field.decode("latin-1")
+            assert bool(empty[r]) == (field == b""), (col.name, r, field)
+            if col.dtype == "int32":
+                want_ok, want = oracle_int(s)
+                assert bool(valid[r]) == want_ok, (col.name, r, s)
+                if want_ok:
+                    assert int(values[r]) == want, (col.name, r, s)
+            elif col.dtype == "float32":
+                want_ok = oracle_float_valid(s)
+                assert bool(valid[r]) == want_ok, (col.name, r, s)
+                if want_ok:
+                    check_float_value(s, values[r])
+            elif col.dtype == "date":
+                want_ok, want = oracle_date(s)
+                assert bool(valid[r]) == want_ok, (col.name, r, s)
+                if want_ok:
+                    assert int(values[r]) == want, (col.name, r, s)
+            else:  # str round-trips exactly through the CSS
+                got = bytes(a["data"][a["offsets"][r]: a["offsets"][r + 1]])
+                assert got == field, (col.name, r, field, got)
+
+
+def _matrix():
+    return [(name, tagging)
+            for name in formats.available_formats()
+            for tagging in formats.get_format(name).tagging_modes]
+
+
+def test_canonical_covers_registry():
+    """A newly registered format must bring a canonical input (and, via
+    tests/oracles, an oracle) or conformance fails loudly."""
+    assert set(CANONICAL) == set(formats.available_formats())
+    for name in formats.available_formats():
+        assert formats.get_format(name).oracle is not None, name
+
+
+@pytest.mark.parametrize("name,tagging", _matrix())
+def test_format_oneshot(name, tagging):
+    data = CANONICAL[name]
+    records = formats.get_format(name).oracle(data)
+    assert records, name  # canonical inputs parse to at least one record
+    res = {be: parser_for(name, be, tagging).parse(data) for be in BACKENDS}
+    _assert_results_equal(res["reference"], res["pallas"],
+                          label=f"{name}/{tagging}: ")
+    _assert_results_equal(res["reference"], res["pallas-fused"],
+                          label=f"{name}/{tagging} fused: ")
+    _check_against_oracle(res["reference"],
+                          parser_for(name, "reference", tagging), records)
+
+
+@pytest.mark.parametrize("name", sorted(CANONICAL))
+def test_format_streaming(name):
+    """Multi-partition streaming: mid-record splits (including inside
+    quotes/brackets/parens/nested containers) must carry correctly on all
+    backends, and totals must match the oracle."""
+    spec = formats.get_format(name)
+    data = CANONICAL[name] * 4
+    records = spec.oracle(data)
+    outs = {}
+    for be in BACKENDS:
+        sp = StreamingParser(parser_for(name, be, spec.tagging),
+                             partition_bytes=96, max_carry_bytes=256)
+        outs[be] = list(sp.parse_stream([data]))
+        assert sp.stats.partitions > 1, name
+        assert sp.stats.records == len(records), (name, be)
+    for be in ("pallas", "pallas-fused"):
+        assert len(outs[be]) == len(outs["reference"])
+        for (r, n_r), (q, n_q) in zip(outs["reference"], outs[be]):
+            assert n_r == n_q
+            _assert_results_equal(r, q, label=f"{name}/{be} stream: ")
+    assert sum(n for _, n in outs["reference"]) == len(records)
+
+
+def test_parser_config_rejects_unsupported_tagging():
+    spec = formats.get_format("csv")
+    restricted = formats.FormatSpec(
+        name="csv-tagged-only", make_dfa=spec.make_dfa,
+        default_schema=spec.default_schema, tagging_modes=("tagged",))
+    formats.register_format(restricted)
+    try:
+        with pytest.raises(ValueError, match="does not support tagging"):
+            formats.parser_config("csv-tagged-only", tagging="vector")
+    finally:
+        formats._REGISTRY.pop("csv-tagged-only")
+
+
+def test_register_rejects_malformed_dfa():
+    """Registration runs Dfa.validate_tables — a table whose group 0 is not
+    the record delimiter (prepare/streaming contract) must be rejected."""
+    import dataclasses
+
+    from repro.core import make_simple_dfa
+
+    def bad():
+        dfa = make_simple_dfa()
+        em = dfa.emission.copy()
+        em[:, 0] = 0  # record-delim group never emits RECORD_DELIM
+        return dataclasses.replace(dfa, emission=em)
+
+    with pytest.raises((ValueError, AssertionError)):
+        formats.register_format(formats.FormatSpec(
+            name="bad", make_dfa=bad,
+            default_schema=formats.get_format("simple").default_schema))
+    assert "bad" not in formats.available_formats()

@@ -340,3 +340,195 @@ if HAVE_HYPOTHESIS:
             assert bool(v) == want_ok, s
             if want_ok:
                 assert int(got) == want, s
+
+
+# ---------------------------------------------------------------------------
+# per-format differential fuzz (format registry × tests/oracles)
+# ---------------------------------------------------------------------------
+# Random *well-formed* text per dialect; expected output comes from the
+# format's sequential oracle (tests/oracles/), so the generators only have
+# to stay inside the dialect — they never track rows themselves.  All three
+# backends must agree bit-for-bit; reference must match the oracle.
+
+from repro.core import formats as formats_mod  # noqa: E402
+from tests import oracles  # noqa: E402,F401 — attaches oracles to the registry
+
+FORMAT_FUZZ = ("jsonl", "zone", "clf")
+FORMAT_CI_SEEDS = range(3)
+FORMAT_DEEP_SEEDS = range(3, 13)
+
+
+def _join_tok(rng, alphabet, lo=1, hi=9):
+    return "".join(str(c) for c in rng.choice(alphabet, size=int(rng.integers(lo, hi))))
+
+
+def _j_string(rng):
+    """A depth-1 JSONL string: structural bytes and raw escapes inside."""
+    out = []
+    for _ in range(int(rng.integers(0, 9))):
+        r = rng.random()
+        if r < 0.15:
+            out.append("\\" + str(rng.choice(['"', "n", "\\", "t"])))
+        elif r < 0.5:
+            out.append(str(rng.choice([",", ":", "{", "}", "[", "]", " "])))
+        else:
+            out.append(str(rng.choice(list("abcXYZ09_-+."))))
+    return '"' + "".join(out) + '"'
+
+
+def _j_nested(rng, levels):
+    """Raw nested subtext; bounded depth, closers not matched by type."""
+    items = []
+    for _ in range(int(rng.integers(0, 3))):
+        r = rng.random()
+        if r < 0.25 and levels > 1:
+            items.append(_j_nested(rng, levels - 1))
+        elif r < 0.55:
+            items.append(_j_string(rng))
+        else:
+            items.append(str(int(rng.integers(-99, 100))))
+    o, c = [("{", "}"), ("[", "]")][int(rng.integers(0, 2))]
+    return o + str(rng.choice([", ", ",", " , "])).join(items) + c
+
+
+def make_jsonl_text(seed, n_rows):
+    rng = np.random.default_rng([seed, 1])
+    sp = lambda: " " * int(rng.integers(0, 2))  # noqa: E731
+    lines = []
+    for _ in range(n_rows):
+        idv = str(rng.choice([str(int(rng.integers(-10**10, 10**10))), "007",
+                              "2147483648", "true", "null", "0"]))
+        r = rng.random()
+        if r < 0.5:
+            name = _j_string(rng)
+        elif r < 0.8:
+            name = _j_nested(rng, levels=3)  # value opens depth 2 of max 4
+        else:
+            name = str(rng.choice(["null", "true", "12"]))
+        score = str(rng.choice([f"{float(rng.normal()):.4g}", ".5", "2e3",
+                                "1e39", "3.", "x", "-0.25"]))
+        lines.append("{" + sp() + f'"id"{sp()}:{sp()}{idv}{sp()},{sp()}'
+                     f'"name"{sp()}:{sp()}{name}{sp()},{sp()}'
+                     f'"score"{sp()}:{sp()}{score}' + sp() + "}" + sp())
+        if rng.random() < 0.15:
+            lines.append(str(rng.choice(["", " ", "  "])))  # blank: no record
+    text = "\n".join(lines) + "\n"
+    if rng.random() < 0.3:
+        text = text.rstrip("\n ")  # unterminated tail record
+    return text.encode()
+
+
+def make_zone_text(seed, n_rows):
+    rng = np.random.default_rng([seed, 2])
+    ws = lambda: "".join(  # noqa: E731
+        str(rng.choice([" ", "\t"])) for _ in range(int(rng.integers(1, 3))))
+    tok = lambda: _join_tok(rng, list("abcdXZ0189._-"))  # noqa: E731
+    lines = []
+    for _ in range(n_rows):
+        if rng.random() < 0.2:
+            lines.append(str(rng.choice(["", " ", ";full-line comment"])))
+        ttl = str(rng.choice([str(int(rng.integers(0, 10**10))), "0042",
+                              "2147483647", tok()]))
+        toks = [tok(), ttl, str(rng.choice(["IN", "CH", "HS"])),
+                str(rng.choice(["A", "TXT", "MX", "CNAME"])), tok()]
+        lo = hi = None
+        if rng.random() < 0.4:  # parenthesize a span: record spans lines
+            i = int(rng.integers(1, 5))
+            j = int(rng.integers(i, 5))
+            toks = toks[:i] + ["("] + toks[i:j + 1] + [")"] + toks[j + 1:]
+            lo, hi = i, j + 2
+        out = []
+        for k, t in enumerate(toks):
+            out.append(t)
+            if k == len(toks) - 1:
+                break
+            in_paren = lo is not None and lo <= k < hi
+            near_paren = t in "()" or toks[k + 1] in "()"
+            r = rng.random()
+            if in_paren and r < 0.2:
+                out.append(ws() + f";c{k}\n" + ws())  # in-paren comment
+            elif in_paren and r < 0.5:
+                out.append("\n" + ws())  # newline-as-whitespace
+            elif near_paren and r < 0.65:
+                out.append("")  # parens may abut field content
+            else:
+                out.append(ws())
+        line = "".join(out)
+        if rng.random() < 0.2:
+            line += str(rng.choice(["", " "])) + ";trailing"
+        lines.append(line)
+    text = "\n".join(lines) + "\n"
+    if rng.random() < 0.3:
+        text = text.rstrip("\n\t ;gnilart")  # unterminated tail
+    return text.encode()
+
+
+def make_clf_text(seed, n_rows):
+    rng = np.random.default_rng([seed, 3])
+    lines = []
+    for _ in range(n_rows):
+        if rng.random() < 0.08:
+            lines.append("")  # blank line: a record with one empty field
+            continue
+        host = _join_tok(rng, list("abcXYZ019.-_"))
+        if rng.random() < 0.1:
+            host += "]" + host  # stray ']' outside scopes is data
+        ts_body = _join_tok(rng, list("abc019/: "), 1, 14)
+        if rng.random() < 0.1:
+            ts_body += '"ignored'  # '"' inside [...] is dropped
+        if rng.random() < 0.08:
+            ts_body += "\n "  # newline inside [...] is data
+        req_body = _join_tok(rng, list("GETPOST /abc?=_."), 1, 14)
+        if rng.random() < 0.1:
+            req_body += str(rng.choice(["[", "]"]))  # brackets in quotes: data
+        if rng.random() < 0.08:
+            req_body += "\nx"  # newline inside quotes is data
+        code = str(rng.choice([str(int(rng.integers(-999, 1000))), "200",
+                               "40x", ""]))
+        sep = "  " if rng.random() < 0.1 else " "  # runs mint empty fields
+        lines.append(sep.join([host, f"[{ts_body}]", f'"{req_body}"', code]))
+    text = "\n".join(lines) + "\n"
+    if rng.random() < 0.3:
+        text = text[:-1]
+    return text.encode()
+
+
+FORMAT_GENERATORS = {
+    "jsonl": make_jsonl_text,
+    "zone": make_zone_text,
+    "clf": make_clf_text,
+}
+
+
+def _run_format_differential(fmt, seed, n_rows):
+    # Late import: test_format_conformance imports this module for the typed
+    # oracles, so the shared checker/parser cache loads at call time.
+    from tests.test_format_conformance import (
+        BACKENDS, _check_against_oracle, parser_for)
+    spec = formats_mod.get_format(fmt)
+    data = FORMAT_GENERATORS[fmt](seed, n_rows)
+    records = spec.oracle(data)
+    assert len(records) <= MAX_RECORDS and len(data) + 1 <= PAD_BYTES
+    ps = {be: parser_for(fmt, be, spec.tagging) for be in BACKENDS}
+    chunks = jnp.asarray(ps["reference"].prepare(data, pad_to=PAD_BYTES))
+    ref = ps["reference"].parse_chunks(chunks)
+    pal = ps["pallas"].parse_chunks(chunks)
+    fus = ps["pallas-fused"].parse_chunks(chunks)
+    _assert_results_equal(ref, pal, label=f"{fmt} seed={seed}: ")
+    _assert_results_equal(ref, fus, label=f"{fmt} seed={seed} fused: ")
+    _check_against_oracle(ref, ps["reference"], records)
+
+
+@pytest.mark.parametrize("fmt", FORMAT_FUZZ)
+@pytest.mark.parametrize("seed", FORMAT_CI_SEEDS)
+def test_format_fuzz_ci(fmt, seed):
+    """Deterministic CI profile: fixed seeds, fixed shapes (one compile per
+    format × backend, shared with the conformance suite's parser cache)."""
+    _run_format_differential(fmt, seed, n_rows=16)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fmt", FORMAT_FUZZ)
+@pytest.mark.parametrize("seed", FORMAT_DEEP_SEEDS)
+def test_format_fuzz_deep(fmt, seed):
+    _run_format_differential(fmt, seed, n_rows=24)
