@@ -38,7 +38,15 @@
 Standalone CLI::
 
     PYTHONPATH=src python -m benchmarks.bench_parser \
-        [--backend all] [--workload all] [--json BENCH_parser.json] [--records 250]
+        [--backend all] [--workload all] [--json BENCH_parser.json] \
+        [--records 250] [--tuned] [--check-tuned]
+
+``--tuned`` adds autotuned variants (``ParserConfig(autotune=True)`` —
+cache-resolved knobs from ``repro.tune``) next to every default-config
+variant, plus per-workload ``tuned_vs_default`` ratio blocks.
+``--check-tuned`` exits non-zero if any tuned config is more than 5%
+slower than its default — the nightly guard that a stale cache entry
+can't silently regress the tuned path.
 
 A partial run (``--workload formats`` etc.) merges its rows into an
 existing ``BENCH_parser.json`` instead of clobbering the other workloads'
@@ -52,8 +60,12 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
     {
       "meta": {
         "interpret": bool,        # Pallas interpret mode (always true on CPU)
-        "n_records_base": int     # --records (taxi runs 4x this)
-      },
+        "n_records_base": int,    # --records (taxi runs 4x this)
+        "device_kind": str,       # jax.devices()[0].device_kind — the
+        "platform": str,          #   environment fingerprint: numbers from
+        "jax_version": str,       #   different fingerprints are not
+        "cpu_count": int          #   comparable (same axes as the autotune
+      },                          #   cache key)
       "workloads": {
         "<yelp|taxi>": {
           "n_records": int,       # records in the generated input
@@ -86,7 +98,13 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
           "fused_vs_staged": {            # pallas/fused-pipeline vs pallas/
             "speedup": float,             # fused, us_per_call ratio (staged/
             "no_slower": bool             # fused); whole-pipeline-fusion
-          }                               # accountability metric
+          },                              # accountability metric
+          "tuned_vs_default": {           # --tuned only: "<backend>/tuned"
+            "<backend>": {                #   (autotune=True) vs the backend
+              "speedup": float,           #   default variant, us_per_call
+              "no_slower": bool           #   ratio (default/tuned); 5% noise
+            }                             #   margin — the autotuner's
+          }                               #   do-no-harm gate
         },
         "formats": {                      # per-registered-format workload
           "<csv|jsonl|zone|clf>": {
@@ -94,13 +112,16 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
             "bytes": int,                 # raw input size
             "outputs_match": bool,        # all variants bit-identical
             "variants": {
-              "<reference|pallas|pallas-fused>": {
+              "<reference|pallas|pallas-fused>": {  # + "<backend>-tuned"
                 "us_per_call": float,     # best-of e2e parse wall clock
                 "gbps": float,            # bytes / us_per_call
                 "records": int,           # records the parse reported
                 "execute_path": str       # staged | fused (resolved tier)
               }
-            }
+            },
+            "tuned_vs_default": {         # --tuned only, same shape/margin
+              "<backend>": {"speedup": float, "no_slower": bool}
+            }                             #   as the yelp/taxi block
           }
         },
         "stream": {                       # §4.4 streaming-engine workload
@@ -111,8 +132,9 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
           "max_carry_bytes": int,
           "variants": {
             "<backend>/S<K>": {           # K concurrent streams, batched
-              "s_total": float,           # end-to-end wall clock (one run,
-                                          #   after a warm-up run)
+              "s_total": float,           # end-to-end wall clock (round-
+                                          #   robin best-of after a warm-up
+                                          #   run — tune/measure.py core)
               "gbps": float,              # sum of bytes_in / s_total — the
                                           #   honest number: carry re-parses
                                           #   are NOT in the numerator
@@ -120,6 +142,9 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
               "n_records_per_stream": int,# records actually generated per
                                           #   stream for THIS variant
               "bytes": int,               # total source bytes (all streams)
+              "partition_bytes": int,     # partition size this variant ran
+                                          #   (tuned variants resolve it from
+                                          #   the cache's stream section)
               "bytes_reparsed": int,      # carry bytes parsed again (device
                                           #   traffic = bytes + reparsed)
               "partitions": int
@@ -138,6 +163,12 @@ projected numbers live in EXPERIMENTS.md §Roofline from the dry-run.
               "speedup": float,           # staged s_total / fused s_total
               "no_slower": bool
             }
+          },
+          "tuned_vs_default": {           # --tuned only: "<backend>-tuned/
+            "<backend>": {                #   S<K>" vs "<backend>/S<K>",
+              "S<K>": {"speedup": float,  #   s_total ratio (default/tuned);
+                       "no_slower": bool} #   10% margin — end-to-end drains
+            }                             #   are noisier than single parses
           }
         },
         "distributed": {                  # mesh-sharded end-to-end workload
@@ -200,6 +231,14 @@ container the windowed-vs-wholecss ratio measures plan+cond overhead only —
 the VMEM-capacity win the windows buy exists only on real hardware, where
 the whole-CSS variant stops fitting at ~16 MB/core and this ratio becomes
 the difference between parsing and not parsing.
+
+Known tuned-config regression note (interpret CPU): past BENCH runs show
+the whole-pipeline megakernel *regressing* the clf / jsonl / zone formats
+relative to the staged path (csv is the fused win), so the committed seed
+cache (``src/repro/tune/default_cache.json``) resolves those formats to
+``fuse_pipeline=False`` on this fingerprint.  A ``--tuned`` run whose
+``tuned_vs_default.no_slower`` goes false means the cache entry has gone
+stale for the current environment — re-run ``python -m repro.tune``.
 """
 from __future__ import annotations
 
@@ -217,6 +256,7 @@ import numpy as np
 
 from benchmarks.common import dataset, emit, gbps, taxi_parser, time_fn, yelp_parser
 from repro.core.streaming import StreamingParser
+from repro.tune import measure as tune_measure
 
 N_YELP = 2000    # ~1.3 MB
 N_TAXI = 8000    # ~0.7 MB
@@ -248,6 +288,25 @@ VARIANTS = {
     "pallas/argsort+fused": ("pallas", "argsort", True, 0, False),
     "pallas/scatter2+fused": ("pallas", "scatter2", True, 0, False),
 }
+
+#: Per backend, the variant whose config is the all-defaults (heuristic)
+#: one — what an untuned user gets, and the ``--tuned`` comparison base.
+_DEFAULT_LABEL = {"reference": "reference/scatter", "pallas": "pallas/fused"}
+
+
+def _tuned_vs_default(variants: dict, pairs: dict) -> dict:
+    """``{key: {speedup, no_slower}}`` for each ``key: (tuned_label,
+    default_label)`` present in ``variants`` — the ``--tuned`` invariant
+    rows (``--check-tuned`` fails the run on any ``no_slower=False``)."""
+    out = {}
+    for key, (tuned_label, default_label) in pairs.items():
+        tv, dv = variants.get(tuned_label), variants.get(default_label)
+        if tv is None or dv is None:
+            continue
+        tu, du = tv["us_per_call"], dv["us_per_call"]
+        out[key] = {"speedup": du / tu,
+                    "no_slower": bool(tu <= du * 1.05)}  # 5% noise margin
+    return out
 
 
 def fig9_chunk_size():
@@ -286,7 +345,8 @@ def fig11_tagging_modes():
 
 def _materialize_only(parsers, rounds=8):
     """Best-of interleaved timing of ``stages.materialize`` alone, per
-    variant, from shared §3.1/§3.2 outputs (identical across variants)."""
+    variant, from shared §3.1/§3.2 outputs (identical across variants).
+    The loop itself is the shared measurement core (``tune.measure``)."""
     from repro.core import backends as backends_mod
     from repro.core import stages as stages_mod
 
@@ -301,26 +361,21 @@ def _materialize_only(parsers, rounds=8):
 
     classes, rec_id, col_id = (jnp.asarray(x) for x in upstream(chunks0))
 
-    fns = {}
+    thunks = {}
     for label, (p, chunks) in parsers.items():
         be = backends_mod.get_backend(p.cfg.backend)
         plan = stages_mod.plan_materialize(p.cfg, be)
         fn = jax.jit(lambda ch, cl, r, c, plan=plan, cfg=p.cfg, be=be:
                      stages_mod.materialize(ch, cl, r, c, plan, cfg, be))
-        for _ in range(2):  # compile + warm
-            jax.block_until_ready(fn(chunks, classes, rec_id, col_id))
-        fns[label] = (fn, chunks)
-    best = {label: float("inf") for label in fns}
-    for _ in range(rounds):
-        for label, (fn, chunks) in fns.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(chunks, classes, rec_id, col_id))
-            best[label] = min(best[label], time.perf_counter() - t0)
-    return best
+        thunks[label] = (lambda fn=fn, ch=chunks:
+                         fn(ch, classes, rec_id, col_id))
+    measured = tune_measure.measure_best(thunks, rounds=rounds)
+    return {label: m.seconds for label, m in measured.items()}
 
 
 def materialize_sweep(n_records=250, backends=("reference", "pallas"),
-                      workloads=("yelp", "taxi"), json_path="BENCH_parser.json"):
+                      workloads=("yelp", "taxi"), json_path="BENCH_parser.json",
+                      tuned=False):
     """Backend × partition-impl × fused/unfused sweep through the same
     jitted pipeline, emitting machine-readable ``BENCH_parser.json``.
 
@@ -342,28 +397,30 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
             continue
         data = dataset(kind, n)
         entry = {"n_records": n, "bytes": len(data), "variants": {}}
-        results, parsers, best = {}, {}, {}
+        parsers = {}
         for label, (backend, impl, fuse, window_rows, fuse_pipe) in VARIANTS.items():
             if backend not in backends:
                 continue
             p = mk(max_records=1 << 12, backend=backend, partition_impl=impl,
                    fuse_typeconv=fuse, window_rows=window_rows,
                    fuse_pipeline=fuse_pipe)
-            chunks = jnp.asarray(p.prepare(data))
-            for _ in range(2):  # compile + warm
-                jax.block_until_ready(p.parse_chunks(chunks))
-            parsers[label] = (p, chunks)
-            best[label] = float("inf")
-        # Round-robin best-of timing: shared-host noise arrives in bursts
-        # long enough to swallow whole per-variant runs, so interleave the
-        # variants and keep each one's best round.
-        for _ in range(6):
-            for label, (p, chunks) in parsers.items():
-                t0 = time.perf_counter()
-                out = p.parse_chunks(chunks)
-                jax.block_until_ready(out)
-                best[label] = min(best[label], time.perf_counter() - t0)
-                results[label] = out
+            parsers[label] = (p, jnp.asarray(p.prepare(data)))
+        if tuned:
+            # cache-resolved configs (ParserConfig(autotune=True)): every
+            # knob the autotuner measured, same machinery otherwise — timed
+            # in the same round-robin group as the defaults they compare to
+            for backend in backends:
+                p = mk(max_records=1 << 12, backend=backend, autotune=True)
+                parsers[f"{backend}/tuned"] = (p, jnp.asarray(p.prepare(data)))
+        # Round-robin best-of timing (tune.measure — the tuner's own loop):
+        # shared-host noise arrives in bursts long enough to swallow whole
+        # per-variant runs, so interleave the variants, keep each one's
+        # best round.
+        measured = tune_measure.measure_best(
+            {label: (lambda p=p, ch=ch: p.parse_chunks(ch))
+             for label, (p, ch) in parsers.items()})
+        best = {label: m.seconds for label, m in measured.items()}
+        results = {label: m.output for label, m in measured.items()}
         for label, (p, chunks) in parsers.items():
             dt, out = best[label], results[label]
             plan = stages_mod.plan_materialize(
@@ -376,13 +433,20 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
                 "fuse_typeconv": p.cfg.fuse_typeconv,
                 "typeconv_path": plan.typeconv_path,
                 # the resolved staged/fused tier for THIS input size (plan
-                # choice + the backend's static fused_max_bytes cap)
+                # choice + the effective fused_max_bytes cap)
                 "execute_path": stages_mod.resolved_execute_path(
                     p.plan, backends_mod.get_backend(p.cfg.backend),
-                    int(chunks.size)),
+                    int(chunks.size), p.cfg),
             }
             emit(f"materialize/{kind}/{label}", dt * 1e6,
                  f"{gbps(len(data), dt):.3f}GB/s;records={int(out.validation.n_records)}")
+        if tuned:
+            entry["tuned_vs_default"] = _tuned_vs_default(
+                entry["variants"], {b: (f"{b}/tuned", _DEFAULT_LABEL[b])
+                                    for b in backends})
+            for b, r in entry["tuned_vs_default"].items():
+                emit(f"materialize/{kind}/tuned_vs_default/{b}", 0.0,
+                     f"{r['speedup']:.3f}x;no_slower={r['no_slower']}")
 
         # Every variant must be bit-identical (stable partition + shared
         # arithmetic make this exact, not a tolerance check).
@@ -462,8 +526,18 @@ def materialize_sweep(n_records=250, backends=("reference", "pallas"),
 
 def _base_report(n_records: int) -> dict:
     """The shared BENCH_parser.json skeleton (single definition so the
-    stream-only and materialize paths can never emit diverging meta)."""
-    return {"meta": {"interpret": True, "n_records_base": n_records},
+    stream-only and materialize paths can never emit diverging meta).
+
+    ``meta`` carries the environment fingerprint: perf numbers are only
+    comparable across runs on the same (device_kind, platform, jax, cpus)
+    — the same identity the autotuner cache keys on (``tune.cache``), so a
+    bench row and the tuned config it exercised name the same machine."""
+    dev = jax.devices()[0]
+    return {"meta": {"interpret": True, "n_records_base": n_records,
+                     "device_kind": str(dev.device_kind),
+                     "platform": str(dev.platform),
+                     "jax_version": jax.__version__,
+                     "cpu_count": os.cpu_count()},
             "workloads": {}}
 
 
@@ -475,38 +549,29 @@ FORMATS_BENCH = ("csv", "jsonl", "zone", "clf")
 
 def _format_payload(fmt: str, n: int) -> bytes:
     """Deterministic synthetic corpus per dialect (no RNG — the perf log
-    must describe a byte-stable input across runs)."""
-    if fmt == "csv":
-        lines = ["%d,user_%d,%d.%02d,2024-01-%02d"
-                 % (i, i, i % 97, i % 100, i % 28 + 1) for i in range(n)]
-    elif fmt == "jsonl":
-        lines = ['{"id": %d, "name": "user_%d", "score": %d.%02d}'
-                 % (i, i, i % 97, i % 100) for i in range(n)]
-    elif fmt == "zone":
-        lines = ["host%d %d IN A 10.0.%d.%d"
-                 % (i, 300 + i % 3600, i % 256, i * 7 % 256)
-                 for i in range(n)]
-        # every 16th record spans lines via parens (the carry-relevant
-        # shape) and trails a comment
-        for i in range(0, n, 16):
-            lines[i] = ("host%d %d ( IN\n\tA ) 10.0.%d.%d;rr"
-                        % (i, 300 + i % 3600, i % 256, i * 7 % 256))
-    elif fmt == "clf":
-        lines = ['10.0.0.%d [01/Jan/2024 00:%02d:%02d] "GET /item/%d" %d'
-                 % (i % 256, i // 60 % 60, i % 60, i, 200 + i % 300)
-                 for i in range(n)]
-    else:
-        raise ValueError(f"no payload generator for format {fmt!r}")
-    return ("\n".join(lines) + "\n").encode()
+    must describe a byte-stable input across runs).  Shared with the
+    autotuner CLI so tuned configs and bench rows measure the same bytes."""
+    from repro.data import synth
+
+    return synth.format_payload(fmt, n)
 
 
-def formats_sweep(n_records=250, backends=("reference", "pallas")):
+def formats_sweep(n_records=250, backends=("reference", "pallas"),
+                  tuned=False):
     """GB/s per registered format × backend on the shared engine.
 
     Parsers come from ``repro.configs.parse_formats.tuned_parser_config``
     (registry DFA + per-format knobs); every variant of a format must be
     bit-identical, so a dialect whose tables break only one backend's
-    kernels cannot land a green perf row."""
+    kernels cannot land a green perf row.
+
+    The non-tuned labels pin their knobs explicitly (``autotune=False``) so
+    this sweep keeps feeding the *un*-resolved baselines the tuner cache is
+    refreshed from.  ``tuned=True`` adds ``<backend>-tuned`` rows that
+    leave every knob to cache resolution — per BENCH history the committed
+    interpret-CPU seed cache resolves clf/jsonl/zone to the staged path
+    (the megakernel regresses them there; csv is its only win), so the
+    tuned rows are the measured-defaults accountability check."""
     from repro.core import Parser
     from repro.core import backends as backends_mod
     from repro.core import stages as stages_mod
@@ -516,30 +581,33 @@ def formats_sweep(n_records=250, backends=("reference", "pallas")):
     for fmt in FORMATS_BENCH:
         data = _format_payload(fmt, n_records)
         entry = {"n_records": n_records, "bytes": len(data), "variants": {}}
-        parsers, best, results = {}, {}, {}
-        for label in ("reference", "pallas", "pallas-fused"):
-            base = "pallas" if label == "pallas-fused" else label
+        parsers = {}
+        labels = ["reference", "pallas", "pallas-fused"]
+        if tuned:
+            labels += [f"{b}-tuned" for b in backends]
+        for label in labels:
+            base = label.replace("-tuned", "").replace("-fused", "")
             if base not in backends:
                 continue
-            p = Parser(tuned_parser_config(
-                fmt, max_records=1 << 12, backend=base,
-                fuse_pipeline=label == "pallas-fused",
-                # pin the radix partition kernel on pallas (interpret-mode
-                # "auto" would pick the jnp pass)
-                partition_impl="kernel" if base == "pallas" else "auto"))
-            chunks = jnp.asarray(p.prepare(data))
-            for _ in range(2):  # compile + warm
-                jax.block_until_ready(p.parse_chunks(chunks))
-            parsers[label] = (p, chunks)
-            best[label] = float("inf")
-        # round-robin best-of (see materialize_sweep on burst noise)
-        for _ in range(6):
-            for label, (p, chunks) in parsers.items():
-                t0 = time.perf_counter()
-                res = p.parse_chunks(chunks)
-                jax.block_until_ready(res)
-                best[label] = min(best[label], time.perf_counter() - t0)
-                results[label] = res
+            if label.endswith("-tuned"):
+                # all knobs cache-resolved (tuned_parser_config autotunes
+                # by default) — the measured per-device config
+                p = Parser(tuned_parser_config(
+                    fmt, max_records=1 << 12, backend=base))
+            else:
+                p = Parser(tuned_parser_config(
+                    fmt, max_records=1 << 12, backend=base, autotune=False,
+                    fuse_pipeline=label == "pallas-fused",
+                    # pin the radix partition kernel on pallas (interpret-
+                    # mode "auto" would pick the jnp pass)
+                    partition_impl="kernel" if base == "pallas" else "auto"))
+            parsers[label] = (p, jnp.asarray(p.prepare(data)))
+        # round-robin best-of via the shared measurement core
+        measured = tune_measure.measure_best(
+            {label: (lambda p=p, ch=ch: p.parse_chunks(ch))
+             for label, (p, ch) in parsers.items()})
+        best = {label: m.seconds for label, m in measured.items()}
+        results = {label: m.output for label, m in measured.items()}
         for label, (p, chunks) in parsers.items():
             dt = best[label]
             n_got = int(results[label].validation.n_records)
@@ -549,10 +617,17 @@ def formats_sweep(n_records=250, backends=("reference", "pallas")):
                 "records": n_got,
                 "execute_path": stages_mod.resolved_execute_path(
                     p.plan, backends_mod.get_backend(p.cfg.backend),
-                    int(chunks.size)),
+                    int(chunks.size), p.cfg),
             }
             emit(f"formats/{fmt}/{label}", dt * 1e6,
                  f"{gbps(len(data), dt):.3f}GB/s;records={n_got}")
+        if tuned:
+            entry["tuned_vs_default"] = _tuned_vs_default(
+                entry["variants"],
+                {b: (f"{b}-tuned", b) for b in backends})
+            for b, r in entry["tuned_vs_default"].items():
+                emit(f"formats/{fmt}/tuned_vs_default/{b}", 0.0,
+                     f"{r['speedup']:.3f}x;no_slower={r['no_slower']}")
         labels = sorted(results)
         if labels:
             base_r = results[labels[0]]
@@ -576,7 +651,8 @@ STREAM_S = (1, 4, 16)
 
 
 def stream_sweep(n_records=250, backends=("reference", "pallas"),
-                 partition_bytes=1 << 14, max_carry_bytes=1 << 13):
+                 partition_bytes=1 << 14, max_carry_bytes=1 << 13,
+                 tuned=False):
     """§4.4 streaming-engine workload: S concurrent yelp-like streams through
     ``StreamSession``, batched (one vmapped dispatch per round, per-stream
     device carry) vs sequential (the same streams one at a time through a
@@ -602,10 +678,19 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
     variants = list(backends)
     if "pallas" in variants:
         variants.append("pallas-fused")
+    if tuned:
+        # cache-resolved configs AND the cache's measured streaming
+        # partition size (tune_stream's stream section)
+        variants += [f"{b}-tuned" for b in backends]
     for backend in variants:
-        be_kw = (dict(backend="pallas", fuse_pipeline=True)
-                 if backend == "pallas-fused" else dict(backend=backend))
-        n_per_stream = n_records if backend == "reference" else max(n_records // 4, 16)
+        base = backend.replace("-tuned", "").replace("-fused", "")
+        if backend == "pallas-fused":
+            be_kw = dict(backend="pallas", fuse_pipeline=True)
+        elif backend.endswith("-tuned"):
+            be_kw = dict(backend=base, autotune=True)
+        else:
+            be_kw = dict(backend=backend)
+        n_per_stream = n_records if base == "reference" else max(n_records // 4, 16)
         datas = [dataset("yelp", n_per_stream, seed=s) for s in range(max(STREAM_S))]
         ratios = {}
         for S in STREAM_S:
@@ -615,24 +700,21 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
             # the steady-state contract (carry resets per call, the compiled
             # step is cached), so the timed pass holds zero compilation.
             parser = yelp_parser(max_records=1 << 12, **be_kw)
-            sess_b = StreamSession(parser, partition_bytes,
+            pb_v = partition_bytes
+            if backend.endswith("-tuned"):
+                from repro.tune import resolve as tune_resolve
+
+                pb_v = tune_resolve.tuned_stream_partition_bytes(
+                    parser.cfg, partition_bytes)
+            sess_b = StreamSession(parser, pb_v,
                                    max_carry_bytes=max_carry_bytes, n_streams=S)
-            sess_q = StreamSession(parser, partition_bytes,
+            sess_q = StreamSession(parser, pb_v,
                                    max_carry_bytes=max_carry_bytes, n_streams=1)
 
             def signature(result, n):
                 """Whole-partition fingerprint for the bit-identity check:
-                every ParseResult field, not just one column."""
-                parts = [np.int64(n)]
-                for f in ("css", "col_start", "col_count", "field_offset",
-                          "field_length", "end_state", "last_record_end"):
-                    parts.append(np.asarray(getattr(result, f)))
-                for name in sorted(result.values):
-                    for f in ("value", "valid", "empty"):
-                        parts.append(np.asarray(getattr(result.values[name], f)))
-                for f in result.validation._fields:
-                    parts.append(np.asarray(getattr(result.validation, f)))
-                return parts
+                every ParseResult field (the tuner's own signature core)."""
+                return [np.int64(n)] + tune_measure.parse_signature(result)
 
             def run_batched(collect=False):
                 outs = {s: [] for s in range(S)}
@@ -660,12 +742,13 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
                 for s in range(S))
             one_run = [dataclasses.replace(st) for st in sess_b.stats]
 
-            t0 = time.perf_counter()
-            run_batched()
-            dt_b = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            run_sequential()
-            dt_q = time.perf_counter() - t0
+            # the shared round-robin best-of core (the collect runs above
+            # already compiled both paths, so warmup=0)
+            measured = tune_measure.measure_best(
+                {"batched": run_batched, "sequential": run_sequential},
+                rounds=2, warmup=0)
+            dt_b = measured["batched"].seconds
+            dt_q = measured["sequential"].seconds
 
             entry["variants"][f"{backend}/S{S}"] = {
                 "s_total": dt_b,
@@ -673,6 +756,7 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
                 "records": sum(st.records for st in one_run),
                 "n_records_per_stream": n_per_stream,
                 "bytes": total_bytes,
+                "partition_bytes": pb_v,
                 "bytes_reparsed": sum(st.bytes_reparsed for st in one_run),
                 "partitions": sum(st.partitions for st in one_run),
             }
@@ -694,6 +778,25 @@ def stream_sweep(n_records=250, backends=("reference", "pallas"),
             }
     if fused_ratios:
         entry["fused_vs_staged"] = fused_ratios
+    if tuned:
+        # cache-resolved vs heuristic-default sessions, same backend and
+        # stream count — the nightly regression gate.  10% margin, not the
+        # 5% the single-parse gates use: these are end-to-end multi-round
+        # session drains (Python feed loop included), and on a 1-CPU
+        # interpret container even identical configs spread ~7% run-to-run.
+        tvd = {}
+        for b in backends:
+            for S in STREAM_S:
+                du = entry["variants"].get(f"{b}/S{S}")
+                tu = entry["variants"].get(f"{b}-tuned/S{S}")
+                if du and tu:
+                    tvd.setdefault(b, {})[f"S{S}"] = {
+                        "speedup": du["s_total"] / tu["s_total"],
+                        "no_slower": bool(
+                            tu["s_total"] <= du["s_total"] * 1.10),
+                    }
+        if tvd:
+            entry["tuned_vs_default"] = tvd
     return entry
 
 
@@ -990,6 +1093,36 @@ def run():
     fig13_end_to_end()
 
 
+def tuned_regressions(report):
+    """All ``tuned_vs_default`` entries in ``report`` whose ``no_slower``
+    gate failed, as ``(path, ratio_dict)`` pairs — the ``--check-tuned``
+    walk (recursive: covers the flat per-backend blocks and the stream
+    sweep's nested per-S blocks alike)."""
+    bad = []
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return
+        for key, val in node.items():
+            here = f"{path}/{key}" if path else key
+            if key == "tuned_vs_default":
+                for leaf_path, leaf in _ratio_leaves(val, here):
+                    if not leaf.get("no_slower", True):
+                        bad.append((leaf_path, leaf))
+            else:
+                walk(val, here)
+
+    def _ratio_leaves(node, path):
+        if isinstance(node, dict) and "no_slower" in node:
+            yield path, node
+        elif isinstance(node, dict):
+            for key, val in node.items():
+                yield from _ratio_leaves(val, f"{path}/{key}")
+
+    walk(report, "")
+    return bad
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--backend", default="all",
@@ -1004,6 +1137,13 @@ def main(argv=None):
                          "workload runs this many records per stream)")
     ap.add_argument("--figs", action="store_true",
                     help="also run the paper-figure suites (9-13)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="add autotuned (cache-resolved) variants and "
+                         "tuned_vs_default ratios to yelp/taxi, formats and "
+                         "stream workloads")
+    ap.add_argument("--check-tuned", action="store_true",
+                    help="with --tuned: exit non-zero if any tuned config "
+                         "is >5%% slower than its default")
     ap.add_argument("--_distributed-child", type=int, default=None,
                     dest="distributed_child", help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
@@ -1019,15 +1159,16 @@ def main(argv=None):
     mat = tuple(w for w in workloads if w in ("yelp", "taxi"))
     if mat:
         report = materialize_sweep(n_records=args.records, backends=backends,
-                                   workloads=mat, json_path="")
+                                   workloads=mat, json_path="",
+                                   tuned=args.tuned)
     else:
         report = _base_report(args.records)
     if "formats" in workloads:
         report["workloads"]["formats"] = formats_sweep(
-            n_records=args.records, backends=backends)
+            n_records=args.records, backends=backends, tuned=args.tuned)
     if "stream" in workloads:
         report["workloads"]["stream"] = stream_sweep(
-            n_records=args.records, backends=backends)
+            n_records=args.records, backends=backends, tuned=args.tuned)
     if "serve" in workloads:
         report["workloads"]["serve"] = serve_sweep(
             n_records=args.records, backends=backends)
@@ -1051,6 +1192,14 @@ def main(argv=None):
         fig11_tagging_modes()
         fig12_partition_size()
         fig13_end_to_end()
+    if args.check_tuned:
+        bad = tuned_regressions(report)
+        for path, leaf in bad:
+            print(f"# TUNED REGRESSION {path}: "
+                  f"{leaf.get('speedup', float('nan')):.2f}x vs default")
+        if bad:
+            raise SystemExit(1)
+        print("# check-tuned: all tuned configs within the 5% gate")
 
 
 if __name__ == "__main__":

@@ -66,8 +66,15 @@ def tuned_parser_config(name: str, **overrides) -> ParserConfig:
     """`formats.parser_config` with this module's tuning filled in.
 
     Caller overrides win over tuning; tuning wins over core defaults.
+    ``autotune`` defaults on: knobs left unset resolve from the measured
+    per-device cache (``repro.tune``) when an entry exists — the static
+    :class:`FormatTuning` values here are the cold-cache floor, the cache
+    carries what measurement actually picked (e.g. the committed seed
+    cache resolves clf/jsonl/zone to the staged path on interpret-CPU,
+    where BENCH_parser.json shows the megakernel regressing).
     """
     t = tuning_for(name)
     for knob in ("chunk_size", "int_width", "float_width"):
         overrides.setdefault(knob, getattr(t, knob))
+    overrides.setdefault("autotune", True)
     return formats.parser_config(name, **overrides)

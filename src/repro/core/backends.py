@@ -364,8 +364,12 @@ def _pl_partition(col_tag, n_cols, impl, cfg) -> partition_mod.Partitioned:
         return partition_mod.PARTITION_IMPLS[impl](col_tag, n_cols)
     from repro.kernels.partition import ops as partition_ops
 
+    kw = {}
+    bt = getattr(cfg, "partition_block_tags", 0)
+    if bt:
+        kw["block_tags"] = bt
     return partition_ops.partition_tags(
-        col_tag, n_cols, interpret=cfg.interpret
+        col_tag, n_cols, interpret=cfg.interpret, **kw
     )
 
 
@@ -526,7 +530,10 @@ def _pl_config_key(cfg) -> Tuple:
         "fuse_typeconv", _fuse(cfg),
         "window_rows", getattr(cfg, "window_rows", 0),
         "max_window_bytes", getattr(cfg, "max_window_bytes", 0),
-        "fuse_pipeline", getattr(cfg, "fuse_pipeline", False),
+        # None (unset) and False trace identically (staged)
+        "fuse_pipeline", bool(getattr(cfg, "fuse_pipeline", False) or False),
+        "partition_block_tags", getattr(cfg, "partition_block_tags", 0),
+        "fused_max_bytes", getattr(cfg, "fused_max_bytes", 0),
     )
 
 

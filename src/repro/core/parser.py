@@ -110,7 +110,8 @@ class ParserConfig:
         Run Pallas kernels in interpret mode (exact, op-by-op; the only
         mode on CPU containers/CI).  Also steers ``partition_impl="auto"``.
     ``block_chunks``
-        Chunks per Pallas grid step in the §3.1 DFA-scan kernels.
+        Chunks per Pallas grid step in the §3.1 DFA-scan kernels
+        (``0`` = kernel default).
     ``fuse_typeconv``
         pallas: convert typed columns in fused gather+convert kernels that
         index the CSS in-kernel (no XLA gather, no ``(R, W)`` byte-matrix
@@ -143,6 +144,25 @@ class ParserConfig:
         index-only (``convert=False``) plans stay staged, and partitions
         larger than the backend's static ``fused_max_bytes`` cap take the
         staged tier at trace time.  Bit-identical to the staged path.
+        ``None`` (the default) means *unset*: autotune resolution may fill
+        it from measurements; unresolved it behaves as ``False`` (staged).
+    ``partition_block_tags``
+        pallas radix-partition kernel (``partition_impl="kernel"``): tags
+        per kernel block.  ``0`` = kernel default.
+    ``fused_max_bytes``
+        Override of the backend's static fused-path byte cap (partitions
+        larger than the cap run the staged tier).  ``0`` = backend default
+        (4 MiB on pallas) — the real ceiling is a VMEM property only
+        measurable on hardware, which is why it is a tunable.
+    ``autotune``
+        Consult the measured-config cache (``repro.tune``) at construction:
+        every knob field still at its declared default is filled from the
+        cache entry for this (backend, device, workload-shape) key, if one
+        exists.  Explicitly set knobs always win; a cold cache leaves the
+        heuristic defaults — resolution precedence ``explicit knob > cache
+        > heuristic default`` (see ``docs/ARCHITECTURE.md`` §Autotuner).
+        Cached values were bit-identity-checked against the reference
+        backend when measured, so autotuning can never change outputs.
     """
 
     dfa: Dfa
@@ -158,19 +178,39 @@ class ParserConfig:
     validate_columns: bool = False
     backend: str = "reference"       # reference | pallas (core/backends.py)
     interpret: bool = True           # Pallas interpret mode (CPU container)
-    block_chunks: int = backends_mod.DEFAULT_BLOCK_CHUNKS
+    block_chunks: int = 0            # pallas DFA-scan grid: chunks per step
+                                     # (0 = kernel default)
     fuse_typeconv: bool = True       # pallas: fused gather+convert kernels
                                      # (False = XLA gather + arithmetic kernel)
     window_rows: int = 0             # pallas fused: rows per CSS-window DMA
                                      # (0 = kernel default, -1 = whole CSS)
     max_window_bytes: int = 0        # pallas fused: static window tile bytes
                                      # (0 = auto-size from window_rows+width)
-    fuse_pipeline: bool = False      # pallas: whole-pipeline megakernel
+    fuse_pipeline: Optional[bool] = None  # pallas: whole-pipeline megakernel
                                      # (replay→tag→partition→convert, one
                                      # kernel per partition; soft-resolves
-                                     # to staged on unsupported plans)
+                                     # to staged on unsupported plans).
+                                     # None = unset (autotune-resolvable),
+                                     # behaves as False.
+    partition_block_tags: int = 0    # pallas radix-partition kernel: tags
+                                     # per block (0 = kernel default)
+    fused_max_bytes: int = 0         # fused-path byte cap override
+                                     # (0 = backend default)
+    autotune: bool = False           # fill default-valued knobs from the
+                                     # measured-config cache (repro.tune)
 
     def __post_init__(self):
+        if self.autotune:
+            # Measured-config resolution (repro.tune): fill every knob
+            # field still at its declared default from the cache entry for
+            # this (backend, device, workload-shape) key.  Runs before plan
+            # validation so resolved values flow through plan_key /
+            # config_key exactly like explicit ones.  Lazy import: the tune
+            # package imports this module.
+            from repro.tune import resolve as tune_resolve
+
+            for name, value in tune_resolve.resolved_knobs(self).items():
+                object.__setattr__(self, name, value)
         # fail fast on typos: backend name + partition impl resolution +
         # window-knob ranges (plan_parse exercises the full planning layer)
         stages_mod.plan_parse(self, backends_mod.get_backend(self.backend))

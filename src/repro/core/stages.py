@@ -145,6 +145,17 @@ def plan_materialize(cfg, backend: ParseBackend, *, convert: bool = True
         raise ValueError(
             f"max_window_bytes must be ≥ 0 (0 = auto-size), got {max_window_bytes}"
         )
+    partition_block_tags = getattr(cfg, "partition_block_tags", 0)
+    if partition_block_tags < 0:
+        raise ValueError(
+            f"partition_block_tags must be ≥ 0 (0 = kernel default), "
+            f"got {partition_block_tags}"
+        )
+    if getattr(cfg, "fused_max_bytes", 0) < 0:
+        raise ValueError(
+            f"fused_max_bytes must be ≥ 0 (0 = backend default), "
+            f"got {cfg.fused_max_bytes}"
+        )
     selected = None
     if not all(c.selected for c in cfg.schema.columns):
         selected = tuple(bool(c.selected) for c in cfg.schema.columns)
@@ -288,14 +299,23 @@ def plan_parse(cfg, backend: ParseBackend, *, convert: bool = True) -> ParsePlan
     )
 
 
+def fused_cap(cfg, backend: ParseBackend) -> int:
+    """The fused path's effective byte cap: the config override
+    (``cfg.fused_max_bytes``, a tunable — the real ceiling is a VMEM
+    property only measurable on hardware) or the backend's static default."""
+    return int(getattr(cfg, "fused_max_bytes", 0) or 0) or backend.fused_max_bytes
+
+
 def resolved_execute_path(plan: ParsePlan, backend: ParseBackend,
-                          n_bytes: int) -> str:
+                          n_bytes: int, cfg=None) -> str:
     """The execution tier ``execute_plan`` actually takes for an input of
     ``n_bytes`` — the plan's choice plus the static byte cap (benchmarks
-    and debug output report this instead of guessing)."""
+    and debug output report this instead of guessing).  ``cfg`` enables the
+    per-config cap override; without it the backend default applies."""
     if plan.execute_path != "fused":
         return "staged"
-    return "fused" if n_bytes <= backend.fused_max_bytes else "staged"
+    cap = fused_cap(cfg, backend) if cfg is not None else backend.fused_max_bytes
+    return "fused" if n_bytes <= cap else "staged"
 
 
 def dfa_key(dfa) -> Tuple:
@@ -369,7 +389,7 @@ def execute_plan(
     # megakernel.  Both conditions are trace-time Python (shape + plan), so
     # the staged composition below is the statically bounded fallback tier
     # — same design as the windowed numparse cap, one level up.
-    if plan.execute_path == "fused" and raw_chunks.size <= backend.fused_max_bytes:
+    if plan.execute_path == "fused" and raw_chunks.size <= fused_cap(cfg, backend):
         return backend.execute(raw_chunks, plan, cfg, initial_state,
                                stitch=stitch)
 

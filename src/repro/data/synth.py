@@ -83,3 +83,32 @@ def skewed(rng: np.random.Generator, n_records: int, big_bytes: int = 1 << 20) -
     data = yelp_like(rng, n_records // 2)
     big = b'999999,5,0,"' + b"x" * big_bytes + b'",2020-01-01\n'
     return data + big + yelp_like(rng, n_records - n_records // 2 - 1)
+
+
+def format_payload(fmt: str, n: int) -> bytes:
+    """Deterministic synthetic corpus per registered dialect (csv / jsonl /
+    zone / clf).  No RNG — the benchmark and autotuner logs must describe a
+    byte-stable input across runs, so tuned configs and bench rows measured
+    on different days still refer to the same bytes."""
+    if fmt == "csv":
+        lines = ["%d,user_%d,%d.%02d,2024-01-%02d"
+                 % (i, i, i % 97, i % 100, i % 28 + 1) for i in range(n)]
+    elif fmt == "jsonl":
+        lines = ['{"id": %d, "name": "user_%d", "score": %d.%02d}'
+                 % (i, i, i % 97, i % 100) for i in range(n)]
+    elif fmt == "zone":
+        lines = ["host%d %d IN A 10.0.%d.%d"
+                 % (i, 300 + i % 3600, i % 256, i * 7 % 256)
+                 for i in range(n)]
+        # every 16th record spans lines via parens (the carry-relevant
+        # shape) and trails a comment
+        for i in range(0, n, 16):
+            lines[i] = ("host%d %d ( IN\n\tA ) 10.0.%d.%d;rr"
+                        % (i, 300 + i % 3600, i % 256, i * 7 % 256))
+    elif fmt == "clf":
+        lines = ['10.0.0.%d [01/Jan/2024 00:%02d:%02d] "GET /item/%d" %d'
+                 % (i % 256, i // 60 % 60, i % 60, i, 200 + i % 300)
+                 for i in range(n)]
+    else:
+        raise ValueError(f"no payload generator for format {fmt!r}")
+    return ("\n".join(lines) + "\n").encode()

@@ -55,6 +55,17 @@ class PlanRegistry:
         return stages_mod.plan_key(
             cfg, backends_mod.get_backend(cfg.backend))
 
+    def tuned_tiers(self, cfg, default: Tuple[int, ...]) -> Tuple[int, ...]:
+        """The measured recompile-tier ladder for ``cfg``'s workload from
+        the autotuner cache (``repro.tune``), or ``default`` when no entry
+        exists — the service's per-group tier source when constructed
+        without an explicit ladder (``ParseService(tiers=None)``).  Tuned
+        ladders drop batch widths whose measured aggregate throughput does
+        not pay for their compile (``tuner.tune_stream``)."""
+        from repro.tune import resolve as tune_resolve
+
+        return tune_resolve.tuned_serve_tiers(cfg, tuple(default))
+
     def parser(self, cfg, key: Optional[Tuple] = None) -> Tuple[Tuple, Parser]:
         """The shared parser for ``cfg``'s plan key (built on first use)."""
         k = key if key is not None else self.key(cfg)

@@ -46,7 +46,7 @@ import itertools
 import queue
 import threading
 import time
-from typing import Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 from repro.core.parser import ParseResult
 from repro.core.streaming import StreamOverflow, StreamStats
@@ -169,7 +169,13 @@ class ParseService:
     Args:
       tiers: allowed batch widths (``n_streams``), ascending.  A batch of
         *n* compatible tenants runs at the smallest tier ≥ *n* (groups
-        larger than the top tier split across batches).
+        larger than the top tier split across batches).  ``None`` (the
+        default) resolves the ladder *per tenant group* from the autotuner
+        cache (``PlanRegistry.tuned_tiers`` — widths whose measured
+        aggregate throughput paid for their compile, per
+        ``repro.tune.tuner.tune_stream``), with ``DEFAULT_TIERS`` as the
+        cold-cache fallback.  An explicit ladder disables cache resolution
+        entirely (explicit knob > cache > heuristic default).
       max_queued_partitions: per-tenant result-channel bound (the
         backpressure depth).
       admission_wait: how long the dispatcher holds a group open for
@@ -188,12 +194,14 @@ class ParseService:
 
     DEFAULT_TIERS = (1, 4, 16, 64)
 
-    def __init__(self, *, tiers: Sequence[int] = DEFAULT_TIERS,
+    def __init__(self, *, tiers: Optional[Sequence[int]] = None,
                  max_queued_partitions: int = 8,
                  admission_wait: float = 0.02,
                  mesh=None, mesh_axis: str = "streams",
                  start: bool = True):
-        self.tiers = tuple(sorted(int(t) for t in tiers))
+        self._tuned_tiers = tiers is None
+        self.tiers = tuple(sorted(
+            int(t) for t in (self.DEFAULT_TIERS if tiers is None else tiers)))
         if not self.tiers or self.tiers[0] < 1:
             raise ValueError(f"tiers must be positive, got {tiers}")
         self.mesh = mesh
@@ -209,6 +217,8 @@ class ParseService:
                     f"no tier in {self.tiers} divisible by mesh axis "
                     f"{mesh_axis!r} size {d}")
             self.tiers = kept
+        # per-group measured ladders (tiers=None mode), resolved at submit
+        self._group_tiers: Dict[Tuple, Tuple[int, ...]] = {}
         self.max_queued_partitions = int(max_queued_partitions)
         self.admission_wait = float(admission_wait)
         self.registry = PlanRegistry()
@@ -243,6 +253,15 @@ class ParseService:
         # Resolved at submit so an invalid config fails the caller here,
         # not a worker thread later.
         t.group = (self.registry.key(cfg), t.partition_bytes, t.max_carry_bytes)
+        if self._tuned_tiers and t.group not in self._group_tiers:
+            # tiers=None mode: this group's measured ladder from the
+            # autotuner cache (mesh-filtered like the default ladder;
+            # cold cache → the default ladder unchanged)
+            ladder = self.registry.tuned_tiers(cfg, self.tiers)
+            if self.mesh is not None:
+                d = int(self.mesh.shape[self.mesh_axis])
+                ladder = tuple(s for s in ladder if s % d == 0) or self.tiers
+            self._group_tiers[t.group] = tuple(sorted(ladder))
         with self._cv:
             if self._closed:
                 raise RuntimeError("ParseService is closed")
@@ -251,12 +270,17 @@ class ParseService:
             self._cv.notify_all()
         return t
 
-    def tier_for(self, n: int) -> int:
+    def group_tiers(self, group: Tuple) -> Tuple[int, ...]:
+        """The tier ladder serving ``group``: its measured per-group ladder
+        in ``tiers=None`` mode, else the service-wide one."""
+        return self._group_tiers.get(group, self.tiers)
+
+    def tier_for(self, n: int, group: Optional[Tuple] = None) -> int:
         """Smallest tier ≥ n (the top tier for oversized groups)."""
-        for t in self.tiers:
+        for t in self.group_tiers(group) if group is not None else self.tiers:
             if t >= n:
                 return t
-        return self.tiers[-1]
+        return self.group_tiers(group)[-1] if group is not None else self.tiers[-1]
 
     # -- scheduling ----------------------------------------------------------
     def _take_batch_locked(self, flush: bool = False):
@@ -274,12 +298,13 @@ class ParseService:
             if g in self._busy:
                 continue
             members = [u for u in self._pending if u.group == g]
+            top = self.group_tiers(g)[-1]
             ready = (flush or self._closed
-                     or len(members) >= self.tiers[-1]
+                     or len(members) >= top
                      or now - members[0].submitted >= self.admission_wait)
             if not ready:
                 continue
-            batch = members[: self.tiers[-1]]
+            batch = members[:top]
             for u in batch:
                 self._pending.remove(u)
             self._busy.add(g)
@@ -325,7 +350,7 @@ class ParseService:
     # -- batch execution -----------------------------------------------------
     def _run_batch(self, group: Tuple, batch: List[Tenant]) -> None:
         key, partition_bytes, max_carry_bytes = group
-        tier = self.tier_for(len(batch))
+        tier = self.tier_for(len(batch), group)
         skey, session = self.registry.session(
             batch[0].cfg, partition_bytes, max_carry_bytes, tier, key=key,
             mesh=self.mesh, mesh_axis=self.mesh_axis)

@@ -1,0 +1,35 @@
+"""Benchmark-driven autotuner (ROADMAP item 5; paper §5 per-GPU tuning).
+
+ParPaRaw's headline rate depends on per-device tuning of launch geometry
+and chunk sizes; this package replaces our hand-picked kernel knobs with
+*measured* per-device configurations:
+
+  * ``space``   — the search space: every perf knob declared ONCE with its
+    candidates, the stage it gates, and its validity constraints.
+  * ``measure`` — the shared measurement core (compile-excluded warmup +
+    round-robin best-of timing + bit-identity signatures) used by both the
+    tuner and ``benchmarks/bench_parser.py``, so tuner and bench report
+    comparable numbers.
+  * ``cache``   — versioned persistent JSON cache of winning configs, one
+    entry per ``(backend, workload fingerprint, device_kind, interpret)``:
+    a user cache under ``~/.cache/repro-tune/`` layered over the committed
+    seed cache (``default_cache.json``, interpret-CPU measurements).
+  * ``resolve`` — cache-driven knob resolution consulted by
+    ``ParserConfig(autotune=True)``: explicit knob > cache > heuristic
+    default, and tuning can never change outputs (every cached candidate
+    was bit-identity-checked against the reference backend when measured).
+  * ``tuner``   — the coordinate-descent sweep driver (budgeted candidate
+    count, partial-result safe) plus the ``python -m repro.tune`` CLI that
+    refreshes caches.
+"""
+from repro.tune.cache import TuneCache, seed_cache_path, tune_key, user_cache_path
+from repro.tune.measure import measure_best, parse_signature, signatures_equal
+from repro.tune.resolve import resolved_knobs, tuned_serve_tiers
+from repro.tune.space import Knob, knobs_for, apply_assignment
+
+__all__ = [
+    "TuneCache", "seed_cache_path", "tune_key", "user_cache_path",
+    "measure_best", "parse_signature", "signatures_equal",
+    "resolved_knobs", "tuned_serve_tiers",
+    "Knob", "knobs_for", "apply_assignment",
+]

@@ -1,0 +1,90 @@
+"""Shared measurement core for the tuner and the benchmark suite.
+
+One definition of how this repo times a parse candidate — compile-excluded
+warmup, then *round-robin best-of* rounds (shared-host noise arrives in
+bursts long enough to swallow whole per-variant runs, so variants are
+interleaved and each keeps its best round) — used by both
+``repro.tune.tuner`` and ``benchmarks/bench_parser.py``, so tuned configs
+and bench rows are measured by literally the same loop and their numbers
+compare.
+
+Also one definition of a parse output's *bit-identity signature*: every
+array a :class:`~repro.core.stages.ParseResult` carries, as numpy.  The
+tuner compares every candidate's signature against the reference backend
+before timing it (tuning can never change outputs); the bench uses the
+same signature for its cross-variant ``outputs_match`` pin.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Mapping, NamedTuple
+
+import jax
+import numpy as np
+
+DEFAULT_ROUNDS = 6
+DEFAULT_WARMUP = 2
+
+
+class Measured(NamedTuple):
+    """One candidate's measurement: best-of wall clock + its last output."""
+
+    seconds: float
+    output: Any
+
+
+def measure_best(
+    thunks: Mapping[str, Callable[[], Any]],
+    *,
+    rounds: int = DEFAULT_ROUNDS,
+    warmup: int = DEFAULT_WARMUP,
+    timer: Callable[[], float] = time.perf_counter,
+) -> Dict[str, Measured]:
+    """Round-robin best-of timing of ``thunks`` (label → nullary callable
+    returning a jax pytree; blocked-on before the clock stops).
+
+    ``warmup`` calls per thunk run first — compilation and cache warming
+    never contaminate a timed round.  ``timer`` is injectable so the tuner
+    tests can pin coordinate descent deterministically.
+    """
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    outs: Dict[str, Any] = {}
+    best: Dict[str, float] = {}
+    for label, fn in thunks.items():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        best[label] = float("inf")
+    for _ in range(rounds):
+        for label, fn in thunks.items():
+            t0 = timer()
+            out = fn()
+            jax.block_until_ready(out)
+            best[label] = min(best[label], timer() - t0)
+            outs[label] = out
+    return {label: Measured(best[label], outs[label]) for label in thunks}
+
+
+def parse_signature(result) -> List[np.ndarray]:
+    """Whole-result fingerprint for bit-identity checks: every
+    :class:`~repro.core.stages.ParseResult` field — CSS, column geometry,
+    field index, every typed column's value/valid/empty planes, every
+    validation flag, and the carry scalars — as host numpy arrays."""
+    parts: List[np.ndarray] = []
+    for f in ("css", "col_start", "col_count", "field_offset",
+              "field_length", "field_present", "end_state",
+              "last_record_end"):
+        parts.append(np.asarray(getattr(result, f)))
+    for name in sorted(result.values):
+        for f in ("value", "valid", "empty"):
+            parts.append(np.asarray(getattr(result.values[name], f)))
+    for f in result.validation._fields:
+        parts.append(np.asarray(getattr(result.validation, f)))
+    return parts
+
+
+def signatures_equal(a: List[np.ndarray], b: List[np.ndarray]) -> bool:
+    """Exact (bit-for-bit) equality of two :func:`parse_signature` outputs."""
+    return len(a) == len(b) and all(
+        np.array_equal(x, y) for x, y in zip(a, b)
+    )

@@ -1,0 +1,93 @@
+"""Cache-driven knob resolution — the autotuner's runtime half.
+
+``ParserConfig(autotune=True)`` calls :func:`resolved_knobs` during
+construction; the returned values are written onto the (frozen) config
+*before* plan validation, so the resolved knobs flow through
+``stages.plan_parse`` / ``backend.config_key`` exactly like explicit ones
+— one resolution point, every driver downstream (parser, streaming,
+distributed, serving registry) sees tuned values.
+
+Resolution precedence, per knob (see ``docs/ARCHITECTURE.md``):
+
+  1. **explicit knob** — a field not at its declared default is caller
+     intent and is never touched;
+  2. **cache** — the entry under the config's tuning key
+     (user cache over committed seed cache), value re-validated against
+     the knob's candidate constraints (a stale or hand-edited entry can
+     misconfigure nothing);
+  3. **heuristic default** — the pre-autotuner behaviour, untouched
+     (``partition_impl="auto"`` → ``backend.default_partition_impl``,
+     ``fuse_pipeline=None`` → staged, kernel-default geometry).
+
+Cached values can never change parse *outputs*: every candidate the tuner
+stores was bit-identity-checked against the reference backend when it was
+measured (``tuner.tune_parse``), and the constraint re-check here rejects
+values the backend would refuse.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from repro.tune import cache as cache_mod
+from repro.tune import space as space_mod
+
+
+def resolved_knobs(cfg, backend=None) -> Dict[str, Any]:
+    """The cache's knob values for ``cfg``, restricted to fields still at
+    their declared defaults and values valid for the backend.  Empty on a
+    cold cache — the caller's heuristics then apply unchanged."""
+    if backend is None:
+        from repro.core import backends as backends_mod
+
+        backend = backends_mod.get_backend(cfg.backend)
+    entry = cache_mod.chain_lookup(cache_mod.tune_key(cfg)[0])
+    if not entry:
+        return {}
+    knobs = entry.get("knobs")
+    if not isinstance(knobs, dict):
+        return {}
+    out: Dict[str, Any] = {}
+    for k in space_mod.knobs_for(backend):
+        if k.name not in knobs:
+            continue
+        if getattr(cfg, k.name, k.default) != k.default:
+            continue  # explicit knob wins over the cache
+        value = knobs[k.name]
+        if not k.valid(backend, value):
+            continue  # stale/foreign entry: heuristic default wins
+        if value != k.default:
+            out[k.name] = value
+    return out
+
+
+def stream_entry(cfg) -> Optional[dict]:
+    """The cache's ``stream`` section for ``cfg`` (partition bytes, serve
+    tier ladder), or ``None``."""
+    entry = cache_mod.chain_lookup(cache_mod.tune_key(cfg)[0])
+    if not entry:
+        return None
+    s = entry.get("stream")
+    return s if isinstance(s, dict) else None
+
+
+def tuned_serve_tiers(cfg, default: Tuple[int, ...]) -> Tuple[int, ...]:
+    """The measured recompile-tier ladder for ``cfg``'s workload
+    (``serve.ParseService`` batch widths), or ``default`` on a cold cache.
+
+    Validated like every cached value: a non-empty ascending tuple of
+    positive ints, else the default."""
+    s = stream_entry(cfg)
+    tiers = (s or {}).get("serve_tiers")
+    if (isinstance(tiers, (list, tuple)) and tiers
+            and all(isinstance(t, int) and t >= 1 for t in tiers)
+            and list(tiers) == sorted(set(tiers))):
+        return tuple(int(t) for t in tiers)
+    return tuple(default)
+
+
+def tuned_stream_partition_bytes(cfg, default: int) -> int:
+    """The measured streaming partition size for ``cfg``'s workload, or
+    ``default`` on a cold cache."""
+    s = stream_entry(cfg)
+    v = (s or {}).get("partition_bytes")
+    return int(v) if isinstance(v, int) and v > 0 else int(default)

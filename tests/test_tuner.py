@@ -1,0 +1,428 @@
+"""The benchmark-driven autotuner (repro/tune/): cache robustness,
+coordinate-descent determinism under a stubbed clock, the bit-identity
+rejection gate (a backend that alters outputs can never enter the cache),
+cache-driven knob resolution through ``ParserConfig(autotune=True)``
+(precedence: explicit knob > cache > heuristic default), the serve-tier
+ladder plumbing, and a tiny-budget end-to-end tune on both backends.
+
+Every test that touches resolution isolates the cache chain: the user
+cache is pointed at a tmp path via ``$REPRO_TUNE_CACHE`` and the chain
+memo is dropped around the test, so developer machines' real caches (and
+the committed seed cache, unless a test wants it) can't leak in.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Parser, ParserConfig, Schema, make_csv_dfa
+from repro.core import backends as backends_mod
+from repro.core import stages as stages_mod
+from repro.tune import cache as cache_mod
+from repro.tune import measure as measure_mod
+from repro.tune import resolve as resolve_mod
+from repro.tune import space as space_mod
+from repro.tune import tuner
+
+SCHEMA = Schema.of(("a", "int32"), ("b", "str"), ("c", "float32"))
+DATA = b"1,x,1.5\n2,yy,2.5\n3,zzz,-4.0\n" * 6
+
+
+def _cfg(backend="reference", **kw):
+    kw.setdefault("max_records", 64)
+    kw.setdefault("chunk_size", 32)
+    return ParserConfig(dfa=make_csv_dfa(), schema=SCHEMA, backend=backend,
+                        **kw)
+
+
+@pytest.fixture
+def isolated_cache(tmp_path, monkeypatch):
+    """Point the user cache at an empty tmp file; drop the chain memo on
+    entry and exit.  Yields the cache path (not yet existing)."""
+    path = str(tmp_path / "tune_cache.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+    cache_mod.reset()
+    yield path
+    cache_mod.reset()
+
+
+def _seed_user_cache(path, cfg, knobs=None, stream=None):
+    """Write a cache file resolvable by ``cfg``'s tuning key."""
+    digest, echo = cache_mod.tune_key(cfg)
+    entry = {"key": echo}
+    if knobs is not None:
+        entry["knobs"] = knobs
+    if stream is not None:
+        entry["stream"] = stream
+    c = cache_mod.TuneCache(path)
+    c.store(digest, entry)
+    c.save()
+    cache_mod.reset()
+    return digest
+
+
+# -- cache file robustness ---------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    path = str(tmp_path / "c.json")
+    c = cache_mod.TuneCache(path)
+    c.store("d1", {"knobs": {"use_matmul_scan": True}})
+    c.save()
+    reloaded = cache_mod.TuneCache(path)
+    assert len(reloaded) == 1
+    assert reloaded.lookup("d1")["knobs"] == {"use_matmul_scan": True}
+    assert reloaded.lookup("missing") is None
+
+
+def test_cache_section_merge(tmp_path):
+    """A stream-only refresh keeps the knob section and vice versa."""
+    c = cache_mod.TuneCache(str(tmp_path / "c.json"))
+    c.store("d1", {"knobs": {"use_matmul_scan": True}})
+    c.store("d1", {"stream": {"partition_bytes": 4096}})
+    e = c.lookup("d1")
+    assert e["knobs"] == {"use_matmul_scan": True}
+    assert e["stream"] == {"partition_bytes": 4096}
+
+
+def test_cache_lookup_is_a_copy(tmp_path):
+    c = cache_mod.TuneCache(str(tmp_path / "c.json"))
+    c.store("d1", {"knobs": {"window_rows": 128}})
+    c.lookup("d1")["knobs"]["window_rows"] = 999
+    assert c.lookup("d1")["knobs"]["window_rows"] == 128
+
+
+@pytest.mark.parametrize("payload", [
+    "not json at all {",
+    json.dumps([1, 2, 3]),
+    json.dumps({"version": 999, "entries": {"d": {}}}),
+    json.dumps({"version": cache_mod.VERSION, "entries": "bogus"}),
+])
+def test_cache_corrupt_or_mismatched_is_empty(tmp_path, payload):
+    """Missing / corrupt / version-mismatched cache files are EMPTY caches,
+    never exceptions — the resolver falls back to heuristics."""
+    path = tmp_path / "c.json"
+    path.write_text(payload)
+    c = cache_mod.TuneCache(str(path))
+    assert len(c) == 0
+    assert c.lookup("anything") is None
+
+
+def test_cache_missing_file_is_empty(tmp_path):
+    assert len(cache_mod.TuneCache(str(tmp_path / "nope.json"))) == 0
+
+
+# -- search space ------------------------------------------------------------
+
+def test_space_knobs_per_backend():
+    """Pallas-only knobs never reach the reference backend's sweep (or its
+    resolver), and both backends tune the shared knobs."""
+    ref = backends_mod.get_backend("reference")
+    pl = backends_mod.get_backend("pallas")
+    ref_names = {k.name for k in space_mod.knobs_for(ref)}
+    pl_names = {k.name for k in space_mod.knobs_for(pl)}
+    assert "partition_impl" in ref_names and "partition_impl" in pl_names
+    assert "use_matmul_scan" in ref_names
+    assert "block_chunks" in pl_names and "block_chunks" not in ref_names
+    assert "window_rows" in pl_names and "window_rows" not in ref_names
+    # fused-pipeline knobs only exist where a fused executor exists
+    assert ("fuse_pipeline" in pl_names) == (pl.execute is not None)
+    assert "fuse_pipeline" not in ref_names
+
+
+def test_apply_assignment_never_consults_cache():
+    """Candidate configs under measurement resolve exactly their
+    assignment — ``autotune`` is forced off."""
+    cfg = _cfg(autotune=True)
+    out = space_mod.apply_assignment(cfg, {"use_matmul_scan": True})
+    assert out.autotune is False
+    assert out.use_matmul_scan is True
+
+
+# -- measurement core --------------------------------------------------------
+
+def test_measure_best_keeps_best_round():
+    """Injectable timer: best-of is the per-label min across rounds, with
+    labels interleaved (round-robin) rather than run back to back."""
+    ticks = iter([0.0, 5.0,   10.0, 11.0,    # round 1: a=5, b=1
+                  20.0, 22.0, 30.0, 33.0])   # round 2: a=2, b=3
+    out = measure_mod.measure_best(
+        {"a": lambda: np.int32(1), "b": lambda: np.int32(2)},
+        rounds=2, warmup=0, timer=lambda: next(ticks))
+    assert out["a"].seconds == 2.0
+    assert out["b"].seconds == 1.0
+    with pytest.raises(ValueError):
+        measure_mod.measure_best({"a": lambda: 1}, rounds=0)
+
+
+def test_parse_signature_covers_values_and_validation():
+    p = Parser(_cfg())
+    sig = measure_mod.parse_signature(p.parse(DATA))
+    # css + 7 geometry/carry fields + 3 planes per column + validation
+    assert len(sig) >= 8 + 3 * len(SCHEMA.columns)
+    assert measure_mod.signatures_equal(sig, list(sig))
+    bent = list(sig)
+    bent[0] = bent[0] + 1
+    assert not measure_mod.signatures_equal(sig, bent)
+
+
+# -- coordinate descent ------------------------------------------------------
+
+def _stub_measure(preferred):
+    """A measure_fn whose clock deterministically prefers labels containing
+    any of ``preferred`` (and is otherwise stable) — descent becomes a
+    pure function of the space."""
+    def fn(thunks):
+        out = {}
+        for label, thunk in thunks.items():
+            thunk()  # outputs still computed, like the real core
+            fast = any(s in label for s in preferred)
+            out[label] = measure_mod.Measured(0.5 if fast else 1.0, None)
+        return out
+    return fn
+
+
+def test_descent_is_deterministic_under_stub_clock(isolated_cache):
+    """Same space + same stub timings → the exact same assignment, twice;
+    the stubbed winners are picked coordinate by coordinate."""
+    cache = cache_mod.TuneCache(isolated_cache)
+    reports = [
+        tuner.tune_parse(
+            _cfg(), DATA, budget=64, cache=cache,
+            measure_fn=_stub_measure(("argsort", "use_matmul_scan=True",
+                                      "tuned")))
+        for _ in range(2)
+    ]
+    assert reports[0].assignment == reports[1].assignment
+    assert reports[0].assignment["partition_impl"] == "argsort"
+    assert reports[0].assignment["use_matmul_scan"] is True
+    # the cached entry mirrors the report
+    entry = cache.lookup(reports[0].digest)
+    assert entry["knobs"] == reports[0].assignment
+    assert entry["score"]["n_bytes"] == len(DATA)
+
+
+def test_descent_budget_caps_candidates(isolated_cache):
+    """The budget stops the sweep mid-space; the partial assignment is
+    still returned and cached (a partial tune is a valid tune)."""
+    cache = cache_mod.TuneCache(isolated_cache)
+    rep = tuner.tune_parse(
+        _cfg(), DATA, budget=2, cache=cache,
+        measure_fn=_stub_measure(("argsort",)))
+    assert rep.budget_exhausted
+    assert rep.evaluated <= 2 + 1  # incumbents are measured regardless
+    assert cache.lookup(rep.digest) is not None
+
+
+def test_final_head_to_head_demotes_noise_winners(isolated_cache):
+    """A clock that flips preference in the final defaults-vs-tuned group
+    demotes the sweep's 'winner' back to the all-defaults assignment."""
+    calls = {"n": 0}
+
+    def flipping(thunks):
+        out = {}
+        for label, thunk in thunks.items():
+            thunk()
+            if "defaults" in label or "tuned" in label:
+                # the final group: defaults win
+                fast = label == "defaults"
+            else:
+                fast = "argsort" in label or "True" in label
+            out[label] = measure_mod.Measured(0.5 if fast else 1.0, None)
+        calls["n"] += 1
+        return out
+
+    rep = tuner.tune_parse(_cfg(), DATA, budget=64, cache=None,
+                           measure_fn=flipping)
+    backend = backends_mod.get_backend("reference")
+    assert rep.assignment == space_mod.defaults_for(backend)
+    assert rep.seconds == rep.baseline_seconds
+
+
+# -- the bit-identity gate ---------------------------------------------------
+
+def test_identity_gate_rejects_output_altering_backend(isolated_cache):
+    """A backend whose int32 conversion is off by one: every candidate
+    mismatches the reference oracle, nothing is timed, nothing cached."""
+    ref = backends_mod.get_backend("reference")
+
+    def bent_int(css, offset, length, cfg):
+        p = ref.parse_field["int32"](css, offset, length, cfg)
+        return p._replace(value=p.value + 1)
+
+    backends_mod.register_backend(dataclasses.replace(
+        ref, name="bent", parse_field=dict(ref.parse_field, int32=bent_int)))
+    try:
+        cache = cache_mod.TuneCache(isolated_cache)
+        rep = tuner.tune_parse(_cfg(backend="bent"), DATA, budget=8,
+                               cache=cache)
+        assert rep.trials and all(t.rejected for t in rep.trials)
+        assert all("mismatch" in t.rejected for t in rep.trials)
+        assert len(cache) == 0
+        assert rep.seconds == float("inf")
+    finally:
+        del backends_mod.BACKENDS["bent"]
+
+
+# -- cache-driven resolution (ParserConfig(autotune=True)) -------------------
+
+def test_autotune_cold_cache_is_a_noop(isolated_cache):
+    """Cold cache: autotune=True resolves nothing — byte-identical plans
+    to the pre-autotuner behaviour."""
+    cfg = _cfg(autotune=True)
+    plain = _cfg()
+    for k in space_mod.SPACE:
+        assert getattr(cfg, k.name, None) == getattr(plain, k.name, None)
+
+
+def test_autotune_resolves_cached_knobs(isolated_cache):
+    digest = _seed_user_cache(
+        isolated_cache, _cfg(),
+        knobs={"partition_impl": "argsort", "use_matmul_scan": True})
+    cfg = _cfg(autotune=True)
+    assert cache_mod.tune_key(cfg)[0] == digest  # knob fields excluded
+    assert cfg.partition_impl == "argsort"
+    assert cfg.use_matmul_scan is True
+
+
+def test_explicit_knob_beats_cache(isolated_cache):
+    _seed_user_cache(isolated_cache, _cfg(),
+                     knobs={"partition_impl": "argsort"})
+    cfg = _cfg(autotune=True, partition_impl="scatter2")
+    assert cfg.partition_impl == "scatter2"
+
+
+def test_stale_cache_value_falls_back_to_heuristic(isolated_cache):
+    """'kernel' is not a reference-backend partition impl; a cache entry
+    claiming it (stale / hand-edited / foreign device) resolves nothing."""
+    _seed_user_cache(isolated_cache, _cfg(),
+                     knobs={"partition_impl": "kernel", "window_rows": 128})
+    cfg = _cfg(autotune=True)
+    assert cfg.partition_impl == "auto"     # heuristic default survives
+    assert cfg.window_rows == 0             # pallas-only knob never applies
+
+
+def test_autotune_drives_execute_path(isolated_cache):
+    """fuse_pipeline from the cache flows into ParsePlan.execute_path —
+    the staged-vs-fused tier choice is cache-driven end to end."""
+    base = _cfg(backend="pallas")
+    _seed_user_cache(isolated_cache, base, knobs={"fuse_pipeline": True})
+    cfg = _cfg(backend="pallas", autotune=True)
+    assert cfg.fuse_pipeline is True
+    plan = stages_mod.plan_parse(cfg, backends_mod.get_backend("pallas"))
+    assert plan.execute_path == "fused"
+    # and False pins staged even if a heuristic would later prefer fused
+    _seed_user_cache(isolated_cache, base, knobs={"fuse_pipeline": False})
+    cfg2 = _cfg(backend="pallas", autotune=True)
+    plan2 = stages_mod.plan_parse(cfg2, backends_mod.get_backend("pallas"))
+    assert plan2.execute_path == "staged"
+
+
+def test_autotuned_outputs_bit_identical(isolated_cache):
+    """Resolution changes schedules, never outputs: tuned and default
+    configs parse bit-identically."""
+    _seed_user_cache(
+        isolated_cache, _cfg(),
+        knobs={"partition_impl": "argsort", "use_matmul_scan": True})
+    sig_plain = measure_mod.parse_signature(Parser(_cfg()).parse(DATA))
+    sig_tuned = measure_mod.parse_signature(
+        Parser(_cfg(autotune=True)).parse(DATA))
+    assert measure_mod.signatures_equal(sig_plain, sig_tuned)
+
+
+# -- serve-tier ladder -------------------------------------------------------
+
+def test_tuned_serve_tiers_validation(isolated_cache):
+    cfg = _cfg()
+    # cold cache → default
+    assert resolve_mod.tuned_serve_tiers(cfg, (1, 4)) == (1, 4)
+    for bad in ([], [4, 1], [1, "x"], [0, 2], "14"):
+        _seed_user_cache(isolated_cache, cfg, stream={"serve_tiers": bad})
+        assert resolve_mod.tuned_serve_tiers(cfg, (1, 4)) == (1, 4)
+    _seed_user_cache(isolated_cache, cfg, stream={"serve_tiers": [1, 2, 8]})
+    assert resolve_mod.tuned_serve_tiers(cfg, (1, 4)) == (1, 2, 8)
+
+
+def test_tuned_stream_partition_bytes(isolated_cache):
+    cfg = _cfg()
+    assert resolve_mod.tuned_stream_partition_bytes(cfg, 4096) == 4096
+    _seed_user_cache(isolated_cache, cfg, stream={"partition_bytes": 1 << 16})
+    assert resolve_mod.tuned_stream_partition_bytes(cfg, 4096) == 1 << 16
+
+
+def test_service_resolves_per_group_ladder(isolated_cache):
+    """ParseService(tiers=None) pulls each tenant group's measured ladder
+    from the cache at submit; an explicit ladder disables resolution."""
+    from repro.serve import ParseService
+
+    _seed_user_cache(isolated_cache, _cfg(), stream={"serve_tiers": [1, 2]})
+    svc = ParseService(max_queued_partitions=64, start=False)
+    t = svc.submit(_cfg(), b"1,x,1.5\n", partition_bytes=256)
+    assert svc.group_tiers(t.group) == (1, 2)
+    assert svc.tier_for(2, t.group) == 2
+    assert svc.tier_for(5, t.group) == 2   # top tier caps oversized groups
+    svc.step()
+    svc.close()
+
+    explicit = ParseService(tiers=(1, 16), max_queued_partitions=64,
+                            start=False)
+    t2 = explicit.submit(_cfg(), b"1,x,1.5\n", partition_bytes=256)
+    assert explicit.group_tiers(t2.group) == (1, 16)
+    explicit.close()
+
+
+# -- tiny-budget end-to-end --------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_tiny_budget_e2e_smoke(isolated_cache, backend):
+    """A real (non-stubbed) tune with a 3-candidate budget: measures,
+    caches, and the cached knobs resolve through autotune=True."""
+    cache = cache_mod.TuneCache(isolated_cache)
+    rep = tuner.tune_parse(_cfg(backend=backend), DATA, budget=3, rounds=1,
+                           warmup=0, cache=cache)
+    assert rep.seconds < float("inf")
+    assert rep.evaluated <= 3 + 1
+    entry = cache.lookup(rep.digest)
+    assert entry is not None and entry["score"]["us_per_call"] > 0
+    cache_mod.reset()  # the autotune below must see the fresh file
+    cfg = _cfg(backend=backend, autotune=True)
+    be = backends_mod.get_backend(backend)
+    for k in space_mod.knobs_for(be):
+        v = getattr(cfg, k.name)
+        assert v == k.default or k.valid(be, v)
+
+
+def test_tune_stream_writes_section(isolated_cache):
+    cache = cache_mod.TuneCache(isolated_cache)
+    datas = [b"1,x,1.5\n2,y,2.5\n" * 8] * 2
+    sec = tuner.tune_stream(
+        _cfg(), datas, partition_candidates=(256, 512), tiers=(1, 2),
+        cache=cache, repeats=1)
+    assert sec["partition_bytes"] in (256, 512)
+    assert sec["serve_tiers"] and sec["serve_tiers"][0] == 1
+    entry = cache.lookup(cache_mod.tune_key(_cfg())[0])
+    assert entry["stream"]["partition_bytes"] == sec["partition_bytes"]
+
+
+# -- the committed seed cache ------------------------------------------------
+
+def test_seed_cache_resolves_formats_staged(isolated_cache):
+    """The committed interpret-CPU seed cache encodes the BENCH-observed
+    megakernel regressions: clf / jsonl / zone resolve to the staged tier
+    on the pallas backend (csv is the fused win and is deliberately not
+    pinned here).  ``isolated_cache`` points the user cache at an empty
+    tmp file, so this reads the seed layer alone."""
+    from repro.configs.parse_formats import tuned_parser_config
+
+    if not os.path.exists(cache_mod.seed_cache_path()):
+        pytest.skip("seed cache not built")
+    pl = backends_mod.get_backend("pallas")
+    for fmt in ("clf", "jsonl", "zone"):
+        cfg = tuned_parser_config(fmt, max_records=1 << 10, backend="pallas")
+        assert cfg.autotune is True
+        plan = stages_mod.plan_parse(cfg, pl)
+        assert plan.execute_path == "staged", (
+            f"{fmt}: seed cache should resolve the megakernel OFF "
+            f"(fuse_pipeline={cfg.fuse_pipeline})")
